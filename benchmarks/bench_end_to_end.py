@@ -1,0 +1,64 @@
+"""Fig. 3a/3d: end-to-end comparison under the original setting.
+
+Target = {tpch, tpcds} x 600GB x Hardware A, leave-one-out history
+(31 source tasks), 48h virtual budget, 3 seeds per method. Reports the
+final best latency per method and MFTune's relative reduction (paper:
+25.9-43.1% on TPC-H, 37.8-63.1% on TPC-DS).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import cached, load_kb, run_method
+
+METHODS = ["mftune", "tuneful", "rover", "loftune", "locat", "toptune"]
+SEEDS = [0, 1, 2]
+BUDGET = 48 * 3600.0
+
+
+def run(force: bool = False):
+    def compute():
+        from repro.sparksim import SparkWorkload, make_task_id
+
+        rows = []
+        for bench in ("tpch", "tpcds"):
+            target = make_task_id(bench, 600, "A")
+            kb_template = load_kb(exclude=[target])
+            finals = {}
+            evals = {}
+            for method in METHODS:
+                bests, nevals, walls = [], [], []
+                for seed in SEEDS:
+                    kb = load_kb(exclude=[target])  # fresh copy per run
+                    wl = SparkWorkload(bench, 600, "A")
+                    res, wall = run_method(method, wl, kb, BUDGET, seed)
+                    bests.append(res.best_performance)
+                    nevals.append(res.n_evaluations)
+                    walls.append(wall)
+                finals[method] = float(np.mean(bests))
+                evals[method] = float(np.mean(nevals))
+                rows.append({
+                    "name": f"fig3_{bench}600A_{method}",
+                    "us_per_call": float(np.mean(walls)) * 1e6,
+                    "derived": (
+                        f"best_latency_s={np.mean(bests):.0f} (+-{np.std(bests):.0f}) "
+                        f"n_evals={np.mean(nevals):.0f}"
+                    ),
+                })
+            mf = finals["mftune"]
+            reds = {m: 100 * (1 - mf / finals[m]) for m in METHODS if m != "mftune"}
+            rows.append({
+                "name": f"fig3_{bench}600A_mftune_reduction",
+                "us_per_call": 0.0,
+                "derived": (
+                    f"latency_reduction_vs_baselines={min(reds.values()):.1f}%..{max(reds.values()):.1f}% "
+                    f"(paper: {'25.9%..43.1%' if bench == 'tpch' else '37.8%..63.1%'}) "
+                    f"mftune_evals={evals['mftune']:.0f} vs others={np.mean([evals[m] for m in reds]):.0f}"
+                ),
+            })
+        return rows
+
+    return cached("end_to_end", force, compute)

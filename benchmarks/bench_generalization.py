@@ -1,0 +1,55 @@
+"""Fig. 4: generalization across data sizes and hardware (TPC-H).
+
+Cross-scale: 100GB <-> 600GB transfers on Hardware A (16 source tasks of
+the other scale). Cross-hardware: 2->3 node transition (target A/600GB,
+sources = all 2-node scenarios E-H). Reports speedup of tuned-best vs the
+default Spark configuration (paper: up to 3.96x; >=2.18x under hardware
+shift).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import cached, load_kb, run_method
+
+METHODS = ["mftune", "tuneful", "rover", "loftune"]
+SEEDS = [0]
+BUDGET = 48 * 3600.0
+
+
+def _transfer(name, bench, target_args, include, rows):
+    from repro.sparksim import SparkWorkload
+
+    wl0 = SparkWorkload(*target_args)
+    default = wl0.evaluate(wl0.default_config()).aggregate
+    for method in METHODS:
+        sp, walls = [], []
+        for seed in SEEDS:
+            kb = load_kb(include_only=include)
+            wl = SparkWorkload(*target_args)
+            res, wall = run_method(method, wl, kb, BUDGET, seed)
+            sp.append(default / res.best_performance)
+            walls.append(wall)
+        rows.append({
+            "name": f"fig4_{name}_{method}",
+            "us_per_call": float(np.mean(walls)) * 1e6,
+            "derived": f"speedup_vs_default={np.mean(sp):.2f}x (+-{np.std(sp):.2f})",
+        })
+
+
+def run(force: bool = False):
+    def compute():
+        from repro.sparksim import make_task_id
+
+        rows = []
+        # cross data scale
+        for src_gb, tgt_gb in ((100, 600), (600, 100)):
+            include = [make_task_id(b, src_gb, hw) for b in ("tpch", "tpcds") for hw in "ABCDEFGH"]
+            _transfer(f"scale{src_gb}to{tgt_gb}", "tpch", ("tpch", tgt_gb, "A"), include, rows)
+        # cross hardware: 2-node sources -> 3-node target
+        include = [make_task_id(b, gb, hw) for b in ("tpch", "tpcds") for gb in (600,) for hw in "EFGH"]
+        _transfer("hw2to3nodes", "tpch", ("tpch", 600, "A"), include, rows)
+        return rows
+
+    return cached("generalization", force, compute)

@@ -1,0 +1,42 @@
+"""Table 1: Hyperband (n_i, r_i) schedule exactness (R=27, eta=3)."""
+
+from __future__ import annotations
+
+import time
+
+from .common import cached
+
+EXPECTED = {  # s -> [(n_i, r_i), ...] from paper Table 1
+    3: [(27, 1), (9, 3), (3, 9), (1, 27)],
+    2: [(12, 3), (4, 9), (1, 27)],
+    1: [(6, 9), (2, 27)],
+    0: [(4, 27)],
+}
+
+
+def run(force: bool = False):
+    def compute():
+        from repro.core import hb_schedule
+
+        t0 = time.perf_counter()
+        brackets = hb_schedule(R=27, eta=3)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows = []
+        all_match = True
+        for b in brackets:
+            got = [(r.n, int(r.r)) for r in b.rungs]
+            match = got == EXPECTED[b.s]
+            all_match &= match
+            rows.append({
+                "name": f"hb_schedule_s{b.s}",
+                "us_per_call": dt / len(brackets),
+                "derived": f"rungs={got} match_paper_table1={match}",
+            })
+        rows.append({
+            "name": "hb_schedule_table1",
+            "us_per_call": dt,
+            "derived": f"all_brackets_match={all_match}",
+        })
+        return rows
+
+    return cached("hb_schedule", force, compute)

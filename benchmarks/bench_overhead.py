@@ -1,0 +1,45 @@
+"""§7.4.4: tuning overhead — real seconds per MFTune component.
+
+Paper: ~15s similarity prediction; fidelity partitioning 21s (TPC-DS) /
+0.5s (TPC-H); per-iteration ~0.6s similarity + ~2s compression + ~0.2s BO;
+all negligible vs evaluation costs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import cached, load_kb, run_method
+
+BUDGET = 48 * 3600.0
+
+
+def run(force: bool = False):
+    def compute():
+        from repro.sparksim import SparkWorkload, make_task_id
+
+        rows = []
+        for bench in ("tpch", "tpcds"):
+            target = make_task_id(bench, 600, "A")
+            kb = load_kb(exclude=[target])
+            wl = SparkWorkload(bench, 600, "A")
+            res, wall = run_method("mftune", wl, kb, BUDGET, seed=0)
+            iters = max(res.n_evaluations, 1)
+            for comp, secs in sorted(res.overheads.items()):
+                rows.append({
+                    "name": f"overhead_{bench}_{comp}",
+                    "us_per_call": 1e6 * secs / iters,
+                    "derived": f"total_s={secs:.2f} over {iters} evals (wall={wall:.0f}s)",
+                })
+            total_oh = sum(res.overheads.values())
+            rows.append({
+                "name": f"overhead_{bench}_total",
+                "us_per_call": 1e6 * total_oh / iters,
+                "derived": (
+                    f"total_overhead_s={total_oh:.1f} vs virtual_eval_time_h={BUDGET / 3600:.0f} "
+                    f"(negligible={total_oh < 0.01 * BUDGET})"
+                ),
+            })
+        return rows
+
+    return cached("overhead", force, compute)

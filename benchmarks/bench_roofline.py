@@ -1,0 +1,65 @@
+"""§Roofline: the 40-cell table from the dry-run artifacts (ours).
+
+Reads results/dryrun.json (written by repro.launch.dryrun) and emits one
+row per successful single-pod cell: the three terms, bottleneck, useful
+ratio and roofline fraction. Multi-pod rows prove the pod axis shards.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import REPO, cached
+
+
+def run(force: bool = False):
+    def compute():
+        path = os.path.join(REPO, "results", "dryrun.json")
+        if not os.path.exists(path):
+            return [{"name": "roofline_missing", "us_per_call": 0.0,
+                     "derived": "run: python -m repro.launch.dryrun --all --both-meshes"}]
+        with open(path) as f:
+            results = json.load(f)
+        rows = []
+        n_ok = n_skip = n_err = 0
+        for r in results:
+            tag = f"{r['arch']}__{r['shape']}__{'512' if r['multi_pod'] else '256'}"
+            if r["status"] == "skipped":
+                n_skip += 1
+                if not r["multi_pod"]:
+                    rows.append({"name": f"roofline_{tag}", "us_per_call": 0.0,
+                                 "derived": f"SKIP: {r['reason']}"})
+                continue
+            if r["status"] != "ok":
+                n_err += 1
+                rows.append({"name": f"roofline_{tag}", "us_per_call": 0.0,
+                             "derived": f"ERROR: {r.get('error', '?')[:120]}"})
+                continue
+            n_ok += 1
+            rl = r["roofline"]
+            if not r["multi_pod"]:
+                rows.append({
+                    "name": f"roofline_{tag}",
+                    "us_per_call": rl["step_time_s"] * 1e6,
+                    "derived": (
+                        f"compute={rl['compute_s']:.4f}s memory={rl['memory_s']:.4f}s "
+                        f"collective={rl['collective_s']:.4f}s bottleneck={rl['bottleneck']} "
+                        f"useful={rl['useful_ratio']:.3f} roofline_frac={rl['roofline_fraction']:.4f} "
+                        f"temp_gb={r['memory']['temp_gb_per_device']}"
+                    ),
+                })
+            else:
+                rows.append({
+                    "name": f"dryrun_multipod_{tag}",
+                    "us_per_call": r["compile_s"] * 1e6,
+                    "derived": f"compiled_ok_512chips temp_gb={r['memory']['temp_gb_per_device']}",
+                })
+        rows.append({
+            "name": "dryrun_sweep_summary",
+            "us_per_call": 0.0,
+            "derived": f"ok={n_ok} skipped={n_skip} errors={n_err}",
+        })
+        return rows
+
+    return cached("roofline", force, compute)

@@ -1,0 +1,69 @@
+"""Fig. 6a/6b: search-space-compression strategy ablation (TPC-H 600GB).
+
+MFTune's density SC vs w/o-SC, Box, Decrease, Project, Vote — each plugged
+into MFTune via MFTuneOptions.compressor. 6a = warm start on; 6b = warm
+start disabled (stress test; the paper reports the gap widens).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import cached, load_kb, run_method
+
+SEEDS = [0]
+BUDGET = 48 * 3600.0
+
+
+def _variants():
+    from repro.baselines import BoxCompressor, DecreaseCompressor, ProjectCompressor, VoteCompressor
+
+    return {
+        "density": {},
+        "wo_sc": {"enable_sc": False},
+        "box": {"compressor": BoxCompressor()},
+        "decrease": {"compressor": DecreaseCompressor()},
+        "project": {"compressor": ProjectCompressor()},
+        "vote": {"compressor": VoteCompressor()},
+    }
+
+
+def run(force: bool = False):
+    def compute():
+        from repro.sparksim import SparkWorkload, make_task_id
+
+        target = make_task_id("tpch", 600, "A")
+        rows = []
+        for warm, tag in ((True, "fig6a_warm"), (False, "fig6b_cold")):
+            finals = {}
+            for name, opts in _variants().items():
+                full_opts = dict(opts)
+                if not warm:
+                    full_opts.update(enable_warmstart_p1=False, enable_warmstart_p2=False)
+                bests, walls = [], []
+                for seed in SEEDS:
+                    kb = load_kb(exclude=[target])
+                    wl = SparkWorkload("tpch", 600, "A")
+                    res, wall = run_method("mftune", wl, kb, BUDGET, seed, mftune_opts=full_opts)
+                    bests.append(res.best_performance)
+                    walls.append(wall)
+                finals[name] = float(np.mean(bests))
+                rows.append({
+                    "name": f"{tag}_{name}",
+                    "us_per_call": float(np.mean(walls)) * 1e6,
+                    "derived": f"best_latency_s={np.mean(bests):.0f}",
+                })
+            d = finals["density"]
+            others = {k: 100 * (1 - d / v) for k, v in finals.items() if k != "density"}
+            paper = "14.8%..35.7%" if warm else "20.4%..43.0%"
+            rows.append({
+                "name": f"{tag}_summary",
+                "us_per_call": 0.0,
+                "derived": (
+                    f"density_reduction_vs_variants={min(others.values()):.1f}%..{max(others.values()):.1f}% "
+                    f"(paper {paper})"
+                ),
+            })
+        return rows
+
+    return cached("sc_ablation", force, compute)

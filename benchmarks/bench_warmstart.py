@@ -1,0 +1,80 @@
+"""Table 3: two-phase warm-start ablation on TPC-H 600GB.
+
+Grid over (P1, P2). The paper reports MFTune's gain over each variant:
+5.50% / 2.15x over neither, 5.13% / 1.98x over P1-only, 1.25% / 1.12x over
+P2-only — i.e. P2 is the primary driver.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import cached, load_kb, run_method, traj_to_curve
+
+SEEDS = [0]
+BUDGET = 48 * 3600.0
+
+GRID = {
+    "p1p2": (True, True),
+    "p1_only": (True, False),
+    "p2_only": (False, True),
+    "neither": (False, False),
+}
+
+
+def _accel(full_curve, t_full, var_curve, t_var, final_full):
+    """Tuning acceleration: time for the variant to reach MFTune's final
+    best, divided by the time MFTune took to reach it."""
+    import numpy as np
+
+    def first_reach(ts, curve, level):
+        for t, v in zip(ts, curve):
+            if v == v and v <= level:
+                return t
+        return float("nan")
+
+    tf = first_reach(t_full, full_curve, final_full * 1.0001)
+    tv = first_reach(t_var, var_curve, final_full * 1.0001)
+    return tv / tf if tf and tf == tf and tv == tv else float("nan")
+
+
+def run(force: bool = False):
+    def compute():
+        from repro.sparksim import SparkWorkload, make_task_id
+
+        target = make_task_id("tpch", 600, "A")
+        rows = []
+        results = {}
+        for name, (p1, p2) in GRID.items():
+            bests, curves, walls = [], [], []
+            for seed in SEEDS:
+                kb = load_kb(exclude=[target])
+                wl = SparkWorkload("tpch", 600, "A")
+                res, wall = run_method(
+                    "mftune", wl, kb, BUDGET, seed,
+                    mftune_opts={"enable_warmstart_p1": p1, "enable_warmstart_p2": p2},
+                )
+                bests.append(res.best_performance)
+                ts, curve = traj_to_curve(res, BUDGET)
+                curves.append(curve)
+                walls.append(wall)
+            results[name] = (float(np.mean(bests)), ts, np.nanmean(curves, axis=0))
+            rows.append({
+                "name": f"table3_{name}",
+                "us_per_call": float(np.mean(walls)) * 1e6,
+                "derived": f"best_latency_s={np.mean(bests):.0f}",
+            })
+        full_best, ts, full_curve = results["p1p2"]
+        paper = {"neither": "5.50%/2.15x", "p1_only": "5.13%/1.98x", "p2_only": "1.25%/1.12x"}
+        for name in ("neither", "p1_only", "p2_only"):
+            vb, tv, vc = results[name]
+            red = 100 * (1 - full_best / vb)
+            acc = _accel(full_curve, ts, vc, tv, full_best)
+            rows.append({
+                "name": f"table3_gain_over_{name}",
+                "us_per_call": 0.0,
+                "derived": f"latency_reduction={red:.2f}% accel={acc:.2f}x (paper {paper[name]})",
+            })
+        return rows
+
+    return cached("warmstart", force, compute)

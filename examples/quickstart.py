@@ -1,0 +1,54 @@
+"""Quickstart: tune a Spark SQL workload with MFTune in 60 seconds.
+
+Creates a small historical knowledge base (2 source tasks), then runs
+MFTune against TPC-H/600GB on Hardware A under a 24h *virtual* budget —
+the simulator's clock charges evaluation latency, so this finishes in
+about a minute of real time.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import KnowledgeBase, MFTune, MFTuneOptions
+from repro.sparksim import SparkWorkload, TaskSpec, generate_history
+from repro.tuneapi import Budget
+
+
+def main() -> None:
+    print("== building a small knowledge base (2 historical tasks)")
+    kb = KnowledgeBase()
+    for i, spec in enumerate([TaskSpec("tpch", 600, "B"), TaskSpec("tpch", 100, "A")]):
+        rec = generate_history(spec.workload(), n_obs=20, seed=i)
+        kb.add_task(rec, persist=False)
+        print(f"   {spec.task_id}: {len(rec.observations)} observations, "
+              f"best={rec.best().performance / 3600:.2f}h")
+
+    wl = SparkWorkload("tpch", 600, "A")
+    default = wl.evaluate(wl.default_config()).aggregate
+    print(f"== target {wl.task_id}: default-config latency {default / 3600:.2f}h")
+
+    print("== tuning (24 virtual hours)...")
+    tuner = MFTune(wl, kb, MFTuneOptions(seed=0))
+    result = tuner.run(Budget(24 * 3600.0))
+
+    print(f"== done: best latency {result.best_performance / 3600:.2f}h "
+          f"({default / result.best_performance:.2f}x speedup vs default)")
+    print(f"   evaluations: {result.n_evaluations} total, "
+          f"{result.n_full_evaluations} full-fidelity "
+          f"(MFO activated at t={result.mfo_activation_time / 3600:.1f}h)"
+          if result.mfo_activation_time is not None else "")
+    print("   convergence:")
+    for p in result.trajectory:
+        print(f"     t={p.time / 3600:6.2f}h  best={p.best / 3600:6.2f}h")
+    top = sorted(result.best_config.items())[:8]
+    print("   best config (first 8 knobs):")
+    for k, v in top:
+        print(f"     {k} = {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from .common import BaselineTuner, RandomSearch, VanillaBO
+from .locat import LOCAT
+from .toptune import TopTune
+from .tuneful import Tuneful
+from .rover import Rover
+from .loftune import LOFTune
+from .sc_variants import BoxCompressor, DecreaseCompressor, ProjectCompressor, VoteCompressor
+
+__all__ = [
+    "BaselineTuner", "RandomSearch", "VanillaBO",
+    "LOCAT", "TopTune", "Tuneful", "Rover", "LOFTune",
+    "BoxCompressor", "DecreaseCompressor", "ProjectCompressor", "VoteCompressor",
+]

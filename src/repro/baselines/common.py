@@ -1,0 +1,135 @@
+"""Shared machinery for the SOTA baseline tuners (paper §7.1).
+
+Every baseline is a full-fidelity iterative tuner: propose a config,
+evaluate the entire workload, record. The accounting (budget charging,
+best-so-far trajectory of *successful full evaluations*) is identical to
+MFTune's so end-to-end comparisons are apples-to-apples.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.acquisition import ei_scores
+from ..core.knowledge import KnowledgeBase, Observation, TaskRecord
+from ..core.mftune import TrajectoryPoint, TuningResult
+from ..core.space import ConfigSpace
+from ..core.surrogate import ProbabilisticRandomForest
+from ..tuneapi import Budget, Workload
+
+Config = Dict[str, Any]
+
+__all__ = ["BaselineTuner", "RandomSearch", "VanillaBO"]
+
+
+class BaselineTuner:
+    name = "baseline"
+
+    def __init__(self, workload: Workload, kb: Optional[KnowledgeBase] = None, seed: int = 0):
+        self.wl = workload
+        self.kb = kb or KnowledgeBase()
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.space: ConfigSpace = workload.space
+        self.obs: List[Observation] = []
+        self._trajectory: List[TrajectoryPoint] = []
+
+    # ------------------------------------------------------------- accounting
+    def _ok(self) -> List[Observation]:
+        return [o for o in self.obs if not o.failed]
+
+    def best(self):
+        ok = self._ok()
+        return min(ok, key=lambda o: o.performance) if ok else None
+
+    def evaluate_full(self, budget: Budget, cfg: Config, query_indices=None) -> Observation:
+        cfg = dict(self.space.default(), **cfg)
+        res = self.wl.evaluate(cfg, query_indices=query_indices)
+        budget.charge(res.elapsed, label=f"{self.name}-eval")
+        o = Observation(
+            config=cfg,
+            performance=res.aggregate if not res.failed else float("inf"),
+            fidelity=1.0 if query_indices is None else 0.0,
+            per_query_perf=list(res.per_query_latency) if not res.failed else None,
+            per_query_cost=list(res.per_query_cost) if not res.failed else None,
+            failed=res.failed,
+            elapsed=res.elapsed,
+            time=budget.now,
+        )
+        if query_indices is None:
+            self.obs.append(o)
+            if not o.failed:
+                b = self.best()
+                if b is o:
+                    self._trajectory.append(
+                        TrajectoryPoint(time=budget.now, best=o.performance, config=cfg, fidelity=1.0)
+                    )
+        return o
+
+    # ---------------------------------------------------------------- running
+    def initialize(self, budget: Budget) -> None:
+        """Default: small LHS init."""
+        for cfg in self.space.lhs_sample(self.rng, 5):
+            if budget.exhausted:
+                return
+            self.evaluate_full(budget, cfg)
+
+    def propose(self, budget: Budget) -> Optional[Config]:
+        raise NotImplementedError
+
+    def step(self, budget: Budget) -> None:
+        cfg = self.propose(budget)
+        if cfg is not None and not budget.exhausted:
+            self.evaluate_full(budget, cfg)
+
+    def run(self, budget: Budget) -> TuningResult:
+        self.initialize(budget)
+        while not budget.exhausted:
+            self.step(budget)
+        b = self.best()
+        return TuningResult(
+            best_config=b.config if b else None,
+            best_performance=b.performance if b else float("inf"),
+            trajectory=self._trajectory,
+            n_evaluations=len(self.obs),
+            n_full_evaluations=len(self.obs),
+            mfo_activation_time=None,
+        )
+
+    # ------------------------------------------------------------------ utils
+    def fit_surrogate(self, obs: Optional[Sequence[Observation]] = None, space=None):
+        obs = list(obs) if obs is not None else self._ok()
+        space = space or self.space
+        if len(obs) < 2:
+            return None
+        X = space.encode_many([o.config for o in obs])
+        y = np.array([o.performance for o in obs])
+        return ProbabilisticRandomForest(seed=self.seed).fit(X, y)
+
+    def ei_pick(self, model, pool: List[Config], space=None) -> Config:
+        space = space or self.space
+        ok = self._ok()
+        best = min(o.performance for o in ok) if ok else 0.0
+        scores = ei_scores(model, space.encode_many(pool), best)
+        return pool[int(np.argmax(scores))]
+
+
+class RandomSearch(BaselineTuner):
+    name = "random"
+
+    def propose(self, budget: Budget) -> Config:
+        return self.space.sample(self.rng, 1)[0]
+
+
+class VanillaBO(BaselineTuner):
+    name = "bo"
+
+    def propose(self, budget: Budget) -> Config:
+        model = self.fit_surrogate()
+        pool = self.space.sample(self.rng, 192)
+        if model is None:
+            return pool[0]
+        return self.ei_pick(model, pool)

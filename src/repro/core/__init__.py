@@ -1,0 +1,50 @@
+"""MFTune core: the paper's contribution as a composable library.
+
+Public API:
+  ConfigSpace & knobs       — search-space definition with range unions
+  ProbabilisticRandomForest — BO surrogate (paper §3.3)
+  SimilarityEngine          — §4.2 transfer weights + transition mechanism
+  SpaceCompressor           — §5 SHAP+KDE density-based compression
+  greedy_query_subset       — §6.1 Alg. 2 fidelity partitioning
+  CandidateGenerator        — §6.2 combined-rank BO + two-phase warm start
+  HyperbandRunner           — §3.4 HB/SHA scheduling with median early stop
+  MFTune                    — §4.1/§6.3 end-to-end controller
+"""
+
+from .space import BoolKnob, CatKnob, ConfigSpace, FloatKnob, IntKnob, Intervals
+from .surrogate import GaussianProcess, ProbabilisticRandomForest
+from .acquisition import expected_improvement, rank_aggregate
+from .gbm import GradientBoostedTrees
+from .kde import WeightedKDE, alpha_mass_categories, alpha_mass_region, silverman_bandwidth
+from .shapley import shapley_values, shapley_values_exact
+from .knowledge import KnowledgeBase, Observation, TaskRecord
+from .similarity import SimilarityEngine, TaskWeights, kendall_tau, surrogate_for_task
+from .compression import SpaceCompressor, compress_space, extract_promising_regions
+from .fidelity import (
+    FidelityPartition,
+    collect_query_stats,
+    early_stop_subset,
+    greedy_query_subset,
+    partition_fidelities,
+    subset_correlation,
+)
+from .generator import CandidateGenerator, WarmStartQueue, phase1_config
+from .hyperband import Bracket, HyperbandRunner, Rung, hb_schedule, sh_schedule
+from .mftune import MFTune, MFTuneOptions, TuningResult
+
+__all__ = [
+    "BoolKnob", "CatKnob", "ConfigSpace", "FloatKnob", "IntKnob", "Intervals",
+    "GaussianProcess", "ProbabilisticRandomForest",
+    "expected_improvement", "rank_aggregate",
+    "GradientBoostedTrees",
+    "WeightedKDE", "alpha_mass_categories", "alpha_mass_region", "silverman_bandwidth",
+    "shapley_values", "shapley_values_exact",
+    "KnowledgeBase", "Observation", "TaskRecord",
+    "SimilarityEngine", "TaskWeights", "kendall_tau", "surrogate_for_task",
+    "SpaceCompressor", "compress_space", "extract_promising_regions",
+    "FidelityPartition", "collect_query_stats", "early_stop_subset",
+    "greedy_query_subset", "partition_fidelities", "subset_correlation",
+    "CandidateGenerator", "WarmStartQueue", "phase1_config",
+    "Bracket", "HyperbandRunner", "Rung", "hb_schedule", "sh_schedule",
+    "MFTune", "MFTuneOptions", "TuningResult",
+]

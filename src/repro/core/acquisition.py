@@ -1,0 +1,52 @@
+"""Acquisition functions and rank aggregation (paper §3.3, §6.2)."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .surrogate import Surrogate
+
+__all__ = ["expected_improvement", "ei_scores", "rank_aggregate"]
+
+
+def expected_improvement(mean: np.ndarray, var: np.ndarray, best: float) -> np.ndarray:
+    """EI for *minimization*: E[max(best - y, 0)].
+
+    ``best`` is the incumbent (lowest observed) objective value.
+    """
+    std = np.sqrt(np.maximum(var, 1e-12))
+    z = (best - mean) / std
+    # Phi and phi of the standard normal
+    phi = np.exp(-0.5 * z**2) / np.sqrt(2 * np.pi)
+    from math import erf
+
+    Phi = 0.5 * (1.0 + np.vectorize(erf)(z / np.sqrt(2.0)))
+    ei = (best - mean) * Phi + std * phi
+    return np.maximum(ei, 0.0)
+
+
+def ei_scores(model: Surrogate, X: np.ndarray, best: float) -> np.ndarray:
+    mean, var = model.predict(X)
+    return expected_improvement(mean, var, best)
+
+
+def rank_aggregate(score_lists: Sequence[np.ndarray], weights: Sequence[float]) -> np.ndarray:
+    """Weighted rank aggregation R(x) = sum_i w_i * R_i(x)  (paper §6.2).
+
+    Each score list is converted to ranks where rank 0 = best (highest
+    acquisition score). Lower aggregate rank = more promising. Returns the
+    aggregate rank per candidate.
+    """
+    if not score_lists:
+        raise ValueError("no scores to aggregate")
+    n = len(score_lists[0])
+    agg = np.zeros(n, dtype=float)
+    for scores, w in zip(score_lists, weights):
+        # argsort of -scores: position in the sorted order = rank
+        order = np.argsort(-np.asarray(scores), kind="stable")
+        ranks = np.empty(n, dtype=float)
+        ranks[order] = np.arange(n, dtype=float)
+        agg += float(w) * ranks
+    return agg

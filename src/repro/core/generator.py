@@ -1,0 +1,208 @@
+"""Candidate configuration generation (paper §6.2).
+
+BO candidates come from a *combined* surrogate: one PRF per source task
+plus one PRF per fidelity level of the current task. Because surrogate
+output scales differ across tasks, acquisition (EI) scores are combined by
+weighted rank aggregation R(x) = sum_i w_i R_i(x); the top-n by aggregate
+rank are recommended. Candidate pool = random samples + mutations of the
+current incumbents (OpenBox-style "sampling and mutation").
+
+Two-phase warm start: Phase 1 picks the single best config of the most
+similar source task for one immediate full-fidelity evaluation; Phase 2
+maintains G_ws = union of better-than-median configs of all sources ranked
+by v(.) (Eq. 3) and injects a few of them at the start of each SH inner
+loop — as many as will survive to full fidelity, so they cannot evict each
+other.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .acquisition import ei_scores, rank_aggregate
+from .knowledge import TaskRecord
+from .similarity import TaskWeights, surrogate_for_task
+from .space import ConfigSpace
+from .surrogate import ProbabilisticRandomForest, Surrogate
+
+Config = Dict[str, Any]
+
+__all__ = ["CandidateGenerator", "WarmStartQueue", "phase1_config"]
+
+
+def phase1_config(weights: TaskWeights, tasks: Dict[str, TaskRecord]) -> Optional[Config]:
+    """Best config of the best similar source task (Phase 1 warm start)."""
+    best_tid, best_sim = None, 0.0
+    for tid, w in weights.weights.items():
+        if tid != "__target__" and w > best_sim:
+            best_tid, best_sim = tid, w
+    if best_tid is None:
+        return None
+    best_obs = tasks[best_tid].best()
+    return dict(best_obs.config) if best_obs else None
+
+
+class WarmStartQueue:
+    """Phase 2 warm start: ranked G_ws, consumed a few at a time."""
+
+    def __init__(self):
+        self._items: List[Tuple[float, Config]] = []
+        self._served: set = set()
+
+    def rebuild(self, weights: TaskWeights, tasks: Dict[str, TaskRecord]) -> None:
+        items: List[Tuple[float, Config]] = []
+        for tid, w in weights.weights.items():
+            if tid == "__target__" or w <= 0 or tid not in tasks:
+                continue
+            obs = tasks[tid].full_fidelity()
+            if len(obs) < 2:
+                continue
+            perf = np.array([o.performance for o in obs])
+            f_med = float(np.median(perf))
+            if f_med <= 0:
+                continue
+            for o in obs:
+                if o.performance < f_med:
+                    v = w * (f_med - o.performance) / f_med  # Eq. 3 priority
+                    items.append((v, dict(o.config)))
+        items.sort(key=lambda t: -t[0])
+        self._items = items
+
+    def take(self, n: int) -> List[Config]:
+        out: List[Config] = []
+        for v, cfg in self._items:
+            key = tuple(sorted((k, repr(val)) for k, val in cfg.items()))
+            if key in self._served:
+                continue
+            self._served.add(key)
+            out.append(cfg)
+            if len(out) >= n:
+                break
+        return out
+
+
+@dataclass
+class SurrogateSource:
+    """A weighted surrogate participating in the combined ranking."""
+
+    name: str
+    model: Surrogate
+    weight: float
+    incumbent: float  # best observed value for its own data (EI reference)
+
+
+class CandidateGenerator:
+    def __init__(self, space: ConfigSpace, seed: int = 0, pool_size: int = 256):
+        self.space = space                # full space: defines the surrogate encoding
+        self.sample_space = space         # possibly compressed: defines the sampling region
+        self.seed = seed
+        self.pool_size = pool_size
+        self._rng = np.random.default_rng(seed)
+        self._model_cache = {}
+
+    def set_sample_space(self, space: ConfigSpace) -> None:
+        """Install the compressed space; candidates are sampled from it and
+        completed with defaults for dropped knobs before encoding."""
+        self.sample_space = space
+
+    _model_cache: Dict[Tuple[str, int], Tuple[Surrogate, float]] = None  # set in __init__
+
+    # ------------------------------------------------------------ surrogates
+    def build_sources(
+        self,
+        weights: TaskWeights,
+        tasks: Dict[str, TaskRecord],
+        target: TaskRecord,
+        fidelities: Sequence[float],
+    ) -> List[SurrogateSource]:
+        sources: List[SurrogateSource] = []
+        # historical tasks (surrogates cached: source observations are frozen)
+        for tid, w in weights.weights.items():
+            if tid == "__target__" or w <= 0 or tid not in tasks:
+                continue
+            key = (f"task:{tid}", len(tasks[tid].observations))
+            if key not in self._model_cache:
+                m = surrogate_for_task(self.space, tasks[tid], seed=self.seed)
+                if m is None:
+                    continue
+                obs = tasks[tid].full_fidelity()
+                inc = min(o.performance for o in obs) if obs else 0.0
+                self._model_cache[key] = (m, inc)
+            m, inc = self._model_cache[key]
+            sources.append(SurrogateSource(name=f"task:{tid}", model=m, weight=w, incumbent=inc))
+        # current task, one surrogate per fidelity level with observations
+        w_t = weights.weights.get("__target__", 0.0)
+        for d in fidelities:
+            obs = target.at_fidelity(d)
+            if len(obs) < 2:
+                continue
+            key = (f"fid:{d:.6f}:{target.task_id}", len(obs))
+            if key in self._model_cache:
+                m, _ = self._model_cache[key]
+                y = np.array([o.performance for o in obs])
+            else:
+                X = self.space.encode_many([o.config for o in obs])
+                y = np.array([o.performance for o in obs])
+                m = ProbabilisticRandomForest(seed=self.seed).fit(X, y)
+                self._model_cache[key] = (m, float(y.min()))
+            # full fidelity of the target carries the target weight; lower
+            # fidelities share it, scaled by their level (closer to full =
+            # more trustworthy), mirroring MFES-style fidelity weighting.
+            wt = w_t * (d if w_t > 0 else 0.0)
+            if w_t <= 0:
+                # with no established target weight (early phase) the current
+                # task's own data is still the only guidance; give it mass.
+                wt = d
+            sources.append(
+                SurrogateSource(name=f"fid:{d:.3f}", model=m, weight=wt, incumbent=float(y.min()))
+            )
+        return sources
+
+    # ------------------------------------------------------------- candidates
+    def _candidate_pool(self, incumbents: Sequence[Config]) -> List[Config]:
+        ss = self.sample_space
+        n_mut = min(self.pool_size // 4, 16 * max(len(incumbents), 1))
+        pool = ss.sample(self._rng, self.pool_size - n_mut if incumbents else self.pool_size)
+        if incumbents:
+            for i in range(n_mut):
+                base = incumbents[i % len(incumbents)]
+                pool.append(ss.mutate(ss.project(base), self._rng))
+        # complete dropped knobs with full-space defaults so every candidate
+        # is a valid full configuration
+        return [dict(self.space.default(), **c) for c in pool]
+
+    def recommend(
+        self,
+        n: int,
+        sources: Sequence[SurrogateSource],
+        incumbents: Sequence[Config] = (),
+        exclude: Sequence[Config] = (),
+    ) -> List[Config]:
+        """Top-n candidates by weighted rank-aggregated EI (§6.2)."""
+        pool = self._candidate_pool(incumbents)
+        # de-duplicate against already-evaluated configs
+        seen = {self._key(c) for c in exclude}
+        pool = [c for c in pool if self._key(c) not in seen] or pool
+        if not sources:
+            self._rng.shuffle(pool)
+            return pool[:n]
+        X = self.space.encode_many(pool)
+        score_lists, wts = [], []
+        for s in sources:
+            if s.weight <= 0:
+                continue
+            score_lists.append(ei_scores(s.model, X, s.incumbent))
+            wts.append(s.weight)
+        if not score_lists:
+            self._rng.shuffle(pool)
+            return pool[:n]
+        agg = rank_aggregate(score_lists, wts)
+        order = np.argsort(agg, kind="stable")
+        return [pool[i] for i in order[:n]]
+
+    @staticmethod
+    def _key(cfg: Config) -> tuple:
+        return tuple(sorted((k, repr(v)) for k, v in cfg.items()))

@@ -1,0 +1,147 @@
+"""Hyperband / successive-halving scheduling (paper §3.4, Alg. 1, Table 1).
+
+The schedule is computed exactly as in Alg. 1:
+    s_max = floor(log_eta(R)),  B = (s_max + 1) * R
+    for s in {s_max, ..., 0}:
+        n_1 = ceil(B/R * eta^s / (s+1)),  r_1 = R * eta^{-s}
+        run SH(n_1, r_1)
+Inside SH, after evaluating n_i configs at resource r_i, the top n_i/eta
+advance to r_{i+1} = eta * r_i until r = R.
+
+Resources map to fidelity deltas: delta = r / R (so R=9, eta=3 gives the
+paper's default proxy levels 1/9, 1/3, 1).
+
+Evaluation is delegated to a callback so the same scheduler drives the
+Spark simulator, the JAX objective and the unit tests. The §6.3 median
+early-stop is applied here: an evaluation is capped at the median cost of
+historical evaluations at the same fidelity (factor configurable).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["hb_schedule", "sh_schedule", "Bracket", "Rung", "HyperbandRunner"]
+
+
+@dataclass
+class Rung:
+    n: int           # configs evaluated at this rung
+    r: float         # resource units
+    delta: float     # fidelity r / R
+
+
+@dataclass
+class Bracket:
+    s: int
+    rungs: List[Rung]
+
+
+def sh_schedule(n1: int, r1: float, R: float, eta: int) -> List[Rung]:
+    rungs = []
+    n, r = n1, r1
+    while True:
+        rungs.append(Rung(n=max(int(n), 1), r=r, delta=min(r / R, 1.0)))
+        if r >= R - 1e-9:
+            break
+        n = max(int(np.floor(n / eta)), 1)
+        r = r * eta
+    return rungs
+
+
+def hb_schedule(R: float, eta: int) -> List[Bracket]:
+    """Alg. 1 / Table 1 enumeration of (n_i, r_i)."""
+    s_max = int(np.floor(np.log(R) / np.log(eta)))
+    B = (s_max + 1) * R
+    brackets = []
+    for s in range(s_max, -1, -1):
+        n1 = int(np.ceil(B / R * (eta**s) / (s + 1)))
+        r1 = R * (eta ** (-s))
+        brackets.append(Bracket(s=s, rungs=sh_schedule(n1, r1, R, eta)))
+    return brackets
+
+
+@dataclass
+class EvalOutcome:
+    config: dict
+    performance: float
+    failed: bool
+    elapsed: float
+
+
+class HyperbandRunner:
+    """Drives one SH inner loop at a time.
+
+    provide_candidates(n, rungs) -> list of configs for a new bracket
+        (the controller injects warm starts + BO candidates here).
+    evaluate(config, delta, cost_cap) -> (performance, failed, elapsed)
+        performance must be comparable within a fidelity (lower better).
+    on_result(config, delta, performance, failed, elapsed) -> None
+        observation hook (knowledge base updates).
+    should_stop() -> bool  budget check between evaluations.
+    """
+
+    def __init__(
+        self,
+        R: float = 9,
+        eta: int = 3,
+        early_stop_factor: float = 1.0,
+        seed: int = 0,
+    ):
+        self.R = R
+        self.eta = eta
+        self.early_stop_factor = early_stop_factor
+        self.brackets = hb_schedule(R, eta)
+        self._bracket_idx = 0
+        self._cost_history: Dict[float, List[float]] = {}
+        self.rng = np.random.default_rng(seed)
+
+    def next_bracket(self) -> Bracket:
+        b = self.brackets[self._bracket_idx % len(self.brackets)]
+        self._bracket_idx += 1
+        return b
+
+    def _cost_cap(self, delta: float) -> Optional[float]:
+        hist = self._cost_history.get(round(delta, 6), [])
+        if len(hist) < 3:
+            return None
+        return self.early_stop_factor * float(np.median(hist))
+
+    def run_bracket(
+        self,
+        bracket: Bracket,
+        provide_candidates: Callable[[int, List[Rung]], List[dict]],
+        evaluate: Callable[[dict, float, Optional[float]], Tuple[float, bool, float]],
+        on_result: Callable[[dict, float, float, bool, float], None],
+        should_stop: Callable[[], bool],
+    ) -> List[EvalOutcome]:
+        """Run one SH inner loop; returns outcomes of the final rung."""
+        rungs = bracket.rungs
+        configs = provide_candidates(rungs[0].n, rungs)
+        outcomes: List[EvalOutcome] = []
+        survivors = list(configs)
+        for rung_i, rung in enumerate(rungs):
+            if should_stop():
+                break
+            results: List[EvalOutcome] = []
+            for cfg in survivors[: rung.n]:
+                if should_stop():
+                    break
+                cap = self._cost_cap(rung.delta)
+                perf, failed, elapsed = evaluate(cfg, rung.delta, cap)
+                self._cost_history.setdefault(round(rung.delta, 6), []).append(elapsed)
+                on_result(cfg, rung.delta, perf, failed, elapsed)
+                results.append(EvalOutcome(cfg, perf, failed, elapsed))
+            ok = [r for r in results if not r.failed]
+            ok.sort(key=lambda r: r.performance)
+            if rung_i + 1 < len(rungs):
+                keep = max(int(np.floor(len(results) / self.eta)), 1)
+                survivors = [r.config for r in ok[:keep]]
+                if not survivors:
+                    break
+            else:
+                outcomes = results
+        return outcomes

@@ -1,0 +1,341 @@
+"""MFTune controller (paper §4.1 workflow, §6.3 MFO process).
+
+Per-iteration workflow (Fig. 2):
+  (1) similarity of source tasks vs. the current task (meta-feature
+      prediction early, Eq. 2 after the transition mechanism fires),
+  (2) density-based search-space compression from similar-task observations,
+  (3) candidate generation = two-phase warm start + combined-rank BO,
+  (4) multi-fidelity evaluation via Hyperband successive halving over
+      query-subset proxies (Alg. 2), with median-cost early stopping,
+  (5) results recorded into the knowledge base.
+
+Degradation paths (§6.3): with no same-query-set history, run full-fidelity
+BO (with transfer + compression) until the transition mechanism admits the
+current task as a source for fidelity partitioning; with no history at all,
+start as vanilla BO and self-transfer once enough observations accumulate.
+
+Ablation switches reproduce the paper's variants: w/o MF, data-volume or
+early-stop proxies (Fig. 5a), SC strategy replacement (Fig. 6), and the
+warm-start phase grid (Table 3).
+"""
+
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..tuneapi import Budget, EvalResult, Workload
+from .compression import SpaceCompressor
+from .fidelity import (
+    FidelityPartition,
+    collect_query_stats,
+    early_stop_subset,
+    partition_fidelities,
+)
+from .generator import CandidateGenerator, WarmStartQueue, phase1_config
+from .hyperband import HyperbandRunner, Rung
+from .knowledge import KnowledgeBase, Observation, TaskRecord
+from .similarity import SimilarityEngine, TaskWeights
+from .space import ConfigSpace
+
+Config = Dict[str, Any]
+
+__all__ = ["MFTuneOptions", "MFTune", "TuningResult"]
+
+
+@dataclass
+class MFTuneOptions:
+    R: float = 9.0
+    eta: int = 3
+    alpha: float = 0.65                  # cumulative density threshold (§7.1: 0.65)
+    seed: int = 0
+    enable_mfo: bool = True              # False => "MFTune w/o MF"
+    enable_sc: bool = True               # False => "w/o SC"
+    enable_transfer: bool = True         # False => ignore history entirely
+    enable_warmstart_p1: bool = True
+    enable_warmstart_p2: bool = True
+    fidelity_mode: str = "sql_selection"  # | "data_volume" | "early_stop"
+    init_lhs: int = 5                     # LHS initialization size (cold paths)
+    min_target_obs_for_partition: int = 8
+    sc_refresh_every: int = 1             # iterations between SC refreshes
+    early_stop_factor: float = 1.0
+    compressor: Optional[Callable[..., ConfigSpace]] = None  # SC strategy override (Fig. 6)
+
+
+@dataclass
+class TrajectoryPoint:
+    time: float
+    best: float
+    config: Config
+    fidelity: float
+
+
+@dataclass
+class TuningResult:
+    best_config: Optional[Config]
+    best_performance: float
+    trajectory: List[TrajectoryPoint]
+    n_evaluations: int
+    n_full_evaluations: int
+    mfo_activation_time: Optional[float]
+    overheads: Dict[str, float] = field(default_factory=dict)
+
+
+class MFTune:
+    def __init__(
+        self,
+        workload: Workload,
+        kb: Optional[KnowledgeBase] = None,
+        options: Optional[MFTuneOptions] = None,
+    ):
+        self.wl = workload
+        self.kb = kb or KnowledgeBase()
+        self.opt = options or MFTuneOptions()
+        self.space: ConfigSpace = workload.space
+        self.rng = np.random.default_rng(self.opt.seed)
+
+        # target task record
+        if workload.task_id in self.kb.tasks:
+            self.target = self.kb.get(workload.task_id)
+        else:
+            self.target = TaskRecord(
+                task_id=workload.task_id,
+                queries=list(workload.queries),
+                meta_features=workload.meta_features(),
+            )
+            self.kb.add_task(self.target, persist=False)
+
+        self.sim = SimilarityEngine(self.space, self.kb, seed=self.opt.seed)
+        self.compressor = SpaceCompressor(self.space, alpha=self.opt.alpha, seed=self.opt.seed)
+        self.gen = CandidateGenerator(self.space, seed=self.opt.seed)
+        self.ws_queue = WarmStartQueue()
+        self.hb = HyperbandRunner(
+            R=self.opt.R, eta=self.opt.eta, early_stop_factor=self.opt.early_stop_factor,
+            seed=self.opt.seed,
+        )
+        self.partition: Optional[FidelityPartition] = None
+        self._mfo_activation_time: Optional[float] = None
+        self._trajectory: List[TrajectoryPoint] = []
+        self._n_eval = 0
+        self._n_full = 0
+        self._overheads: Dict[str, float] = {}
+        self._deltas = [r.delta for r in self.hb.brackets[0].rungs]  # e.g. [1/9, 1/3, 1]
+
+    # ------------------------------------------------------------------ utils
+    def _charge_overhead(self, key: str, t0: float) -> None:
+        self._overheads[key] = self._overheads.get(key, 0.0) + (_time.perf_counter() - t0)
+
+    def _best(self) -> Tuple[Optional[Config], float]:
+        best = self.target.best()
+        if best is None:
+            return None, float("inf")
+        return best.config, best.performance
+
+    # -------------------------------------------------------------- evaluate
+    def _evaluate(
+        self, budget: Budget, config: Config, delta: float, cost_cap: Optional[float]
+    ) -> Tuple[float, bool, float]:
+        """Evaluate config at fidelity delta; record observation; charge budget."""
+        config = dict(self.space.default(), **config)
+        subset: Optional[List[int]] = None
+        data_fraction = 1.0
+        m = len(self.wl.queries)
+        if delta < 1.0:
+            mode = self.opt.fidelity_mode
+            if mode == "sql_selection":
+                assert self.partition is not None
+                subset = self.partition.queries_for(delta) or None
+            elif mode == "early_stop":
+                subset = early_stop_subset(m, delta)
+            elif mode == "data_volume":
+                subset = None
+                data_fraction = delta
+            else:
+                raise ValueError(mode)
+        res = self.wl.evaluate(
+            config, query_indices=subset, cost_cap=cost_cap, data_fraction=data_fraction
+        )
+        budget.charge(res.elapsed, label=f"eval@{delta:.3f}")
+        self._n_eval += 1
+        perf = res.aggregate if not res.failed else float("inf")
+        obs = Observation(
+            config=config,
+            performance=res.aggregate if not res.failed else float("inf"),
+            fidelity=delta,
+            per_query_perf=list(res.per_query_latency) if delta >= 1.0 and not res.failed else None,
+            per_query_cost=list(res.per_query_cost) if delta >= 1.0 and not res.failed else None,
+            query_subset=list(subset) if subset is not None else None,
+            failed=res.failed,
+            elapsed=res.elapsed,
+            time=budget.now,
+        )
+        self.kb.record(self.target.task_id, obs)
+        if delta >= 1.0:
+            self._n_full += 1
+            if not res.failed:
+                _, cur_best = self._best()
+                if res.aggregate <= cur_best:
+                    self._trajectory.append(
+                        TrajectoryPoint(time=budget.now, best=res.aggregate, config=config, fidelity=1.0)
+                    )
+        return perf, res.failed, res.elapsed
+
+    # ----------------------------------------------------------- components
+    def _weights(self) -> TaskWeights:
+        t0 = _time.perf_counter()
+        if not self.opt.enable_transfer:
+            w = TaskWeights(weights={}, similarities={}, used_meta=False)
+            tgt = self.sim.target_self_weight(self.target)
+            if tgt > 0:
+                w.weights["__target__"] = 1.0
+            self._charge_overhead("similarity", t0)
+            return w
+        w = self.sim.compute(self.target)
+        self._charge_overhead("similarity", t0)
+        return w
+
+    def _compress(self, weights: TaskWeights) -> None:
+        if not self.opt.enable_sc:
+            return
+        t0 = _time.perf_counter()
+        tasks = {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
+        if self.opt.compressor is not None:
+            compressed = self.opt.compressor(
+                space=self.space, weights=weights, tasks=tasks, target=self.target
+            )
+        else:
+            compressed = self.compressor.compress(weights, tasks, target=self.target)
+        if len(compressed) > 0:
+            self.gen.set_sample_space(compressed)
+        self._charge_overhead("space_compression", t0)
+
+    def _try_partition(self, weights: TaskWeights) -> None:
+        """Derive the fidelity partition once sources (or self) allow it."""
+        if self.partition is not None or self.opt.fidelity_mode != "sql_selection":
+            return
+        t0 = _time.perf_counter()
+        sources = self.kb.same_query_sources(self.target) if self.opt.enable_transfer else []
+        stats = collect_query_stats(sources, weights.weights)
+        # degradation: current task as its own source once observations suffice
+        if not stats:
+            full = self.target.with_query_vectors()
+            if len(full) >= self.opt.min_target_obs_for_partition and not weights.used_meta:
+                stats = collect_query_stats([self.target], {self.target.task_id: 1.0})
+        if stats:
+            deltas = [d for d in self._deltas if d < 1.0]
+            self.partition = partition_fidelities(stats, deltas)
+        self._charge_overhead("fidelity_partition", t0)
+
+    def _mfo_ready(self) -> bool:
+        if not self.opt.enable_mfo:
+            return False
+        if self.opt.fidelity_mode == "sql_selection":
+            return self.partition is not None
+        return True  # DV / early-stop proxies need no partition
+
+    # ------------------------------------------------------------------ main
+    def run(self, budget: Budget) -> TuningResult:
+        opt = self.opt
+        # ---------------- Phase 1 warm start (once, full fidelity)
+        weights = self._weights()
+        if opt.enable_warmstart_p1 and opt.enable_transfer:
+            tasks = {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
+            cfg1 = phase1_config(weights, tasks)
+            if cfg1 is not None and not budget.exhausted:
+                self._evaluate(budget, cfg1, 1.0, None)
+
+        # ---------------- cold-start LHS init if nothing else to go on
+        if not weights.weights and not self.target.full_fidelity():
+            for cfg in self.space.lhs_sample(self.rng, opt.init_lhs):
+                if budget.exhausted:
+                    break
+                self._evaluate(budget, cfg, 1.0, None)
+            weights = self._weights()
+
+        # ---------------- iterative tuning
+        it = 0
+        while not budget.exhausted:
+            it += 1
+            weights = self._weights()
+            if it % max(opt.sc_refresh_every, 1) == 0:
+                self._compress(weights)
+            self._try_partition(weights)
+
+            if self._mfo_ready():
+                if self._mfo_activation_time is None:
+                    self._mfo_activation_time = budget.now
+                self._run_mfo_bracket(budget, weights)
+            else:
+                self._run_bo_step(budget, weights)
+
+        best_cfg, best_perf = self._best()
+        return TuningResult(
+            best_config=best_cfg,
+            best_performance=best_perf,
+            trajectory=self._trajectory,
+            n_evaluations=self._n_eval,
+            n_full_evaluations=self._n_full,
+            mfo_activation_time=self._mfo_activation_time,
+            overheads=dict(self._overheads),
+        )
+
+    # --------------------------------------------------------------- BO step
+    def _sources_for_gen(self, weights: TaskWeights):
+        tasks = (
+            {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
+            if self.opt.enable_transfer
+            else {}
+        )
+        return self.gen.build_sources(weights, tasks, self.target, self._deltas)
+
+    def _run_bo_step(self, budget: Budget, weights: TaskWeights) -> None:
+        t0 = _time.perf_counter()
+        sources = self._sources_for_gen(weights)
+        incumbent_cfg, _ = self._best()
+        incumbents = [incumbent_cfg] if incumbent_cfg else []
+        evaluated = [o.config for o in self.target.observations]
+        cands = self.gen.recommend(1, sources, incumbents=incumbents, exclude=evaluated)
+        self._charge_overhead("bo_recommend", t0)
+        if cands:
+            self._evaluate(budget, cands[0], 1.0, None)
+
+    # -------------------------------------------------------------- MFO step
+    def _run_mfo_bracket(self, budget: Budget, weights: TaskWeights) -> None:
+        bracket = self.hb.next_bracket()
+        opt = self.opt
+
+        def provide(n: int, rungs: List[Rung]) -> List[Config]:
+            t0 = _time.perf_counter()
+            ws: List[Config] = []
+            multi_rung = len(rungs) > 1
+            if opt.enable_warmstart_p2 and opt.enable_transfer and multi_rung:
+                tasks = {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
+                self.ws_queue.rebuild(weights, tasks)
+                # as many as survive to full fidelity in this inner loop
+                ws = self.ws_queue.take(rungs[-1].n)
+            sources = self._sources_for_gen(weights)
+            incumbent_cfg, _ = self._best()
+            incumbents = [incumbent_cfg] if incumbent_cfg else []
+            evaluated = [o.config for o in self.target.observations]
+            bo = self.gen.recommend(
+                max(n - len(ws), 0), sources, incumbents=incumbents, exclude=evaluated + ws
+            )
+            self._charge_overhead("bo_recommend", t0)
+            return (ws + bo)[:n]
+
+        def evaluate(cfg: Config, delta: float, cap: Optional[float]):
+            return self._evaluate(budget, cfg, delta, cap)
+
+        def on_result(cfg, delta, perf, failed, elapsed):
+            pass  # recording happens inside _evaluate
+
+        self.hb.run_bracket(
+            bracket,
+            provide_candidates=provide,
+            evaluate=evaluate,
+            on_result=on_result,
+            should_stop=lambda: budget.exhausted,
+        )

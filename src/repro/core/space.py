@@ -1,0 +1,437 @@
+"""Configuration search space.
+
+The space is a flat, named collection of knobs. Four knob kinds are
+supported (float / int / categorical / bool), with optional log scaling for
+numeric knobs. Every knob can additionally carry a *restriction*: for
+numeric knobs a union of closed intervals (the output of the density-based
+range compression, paper Eq. 5), and for categorical/bool knobs a subset of
+the choices (paper Eq. 6). Sampling, unit-cube encoding and neighbourhood
+mutation all respect the active restriction.
+
+Encoding: each knob maps to one dimension in [0, 1]. Numeric knobs are
+affinely mapped (in log space when ``log=True``); categorical knobs map to
+the bin midpoint of the chosen category. This single encoding is shared by
+the surrogates, the Shapley attribution, the KDE compression and LHS so
+that all components observe a consistent geometry.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Knob",
+    "FloatKnob",
+    "IntKnob",
+    "CatKnob",
+    "BoolKnob",
+    "ConfigSpace",
+    "Intervals",
+]
+
+
+Interval = Tuple[float, float]
+
+
+class Intervals:
+    """A normalized union of closed intervals on the real line."""
+
+    def __init__(self, intervals: Sequence[Interval]):
+        self.intervals: List[Interval] = self._normalize(intervals)
+
+    @staticmethod
+    def _normalize(intervals: Sequence[Interval]) -> List[Interval]:
+        ivs = sorted((float(a), float(b)) for a, b in intervals if b >= a)
+        merged: List[Interval] = []
+        for a, b in ivs:
+            if merged and a <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], b))
+            else:
+                merged.append((a, b))
+        return merged
+
+    def __bool__(self) -> bool:
+        return bool(self.intervals)
+
+    def __iter__(self):
+        return iter(self.intervals)
+
+    def __repr__(self) -> str:
+        return f"Intervals({self.intervals!r})"
+
+    @property
+    def total_length(self) -> float:
+        return sum(b - a for a, b in self.intervals)
+
+    @property
+    def lo(self) -> float:
+        return self.intervals[0][0]
+
+    @property
+    def hi(self) -> float:
+        return self.intervals[-1][1]
+
+    def contains(self, x: float) -> bool:
+        return any(a - 1e-12 <= x <= b + 1e-12 for a, b in self.intervals)
+
+    def clip(self, x: float) -> float:
+        """Project x onto the nearest point of the union."""
+        if self.contains(x):
+            return x
+        best, bd = x, math.inf
+        for a, b in self.intervals:
+            for edge in (a, b):
+                d = abs(x - edge)
+                if d < bd:
+                    best, bd = edge, d
+        return best
+
+    def sample(self, rng: np.random.Generator, n: int = 1) -> np.ndarray:
+        """Uniform samples over the union (length-weighted across pieces)."""
+        lengths = np.array([b - a for a, b in self.intervals], dtype=float)
+        if lengths.sum() <= 0:
+            # degenerate (point) intervals: pick midpoints uniformly
+            pts = np.array([(a + b) / 2 for a, b in self.intervals])
+            return rng.choice(pts, size=n)
+        probs = lengths / lengths.sum()
+        idx = rng.choice(len(self.intervals), size=n, p=probs)
+        u = rng.random(n)
+        out = np.empty(n)
+        for i, (a, b) in enumerate(self.intervals):
+            sel = idx == i
+            out[sel] = a + u[sel] * (b - a)
+        return out
+
+    def quantile_map(self, u: np.ndarray) -> np.ndarray:
+        """Map u in [0,1] onto the union, proportionally by length.
+
+        Used by LHS so that stratified unit-cube samples remain stratified
+        over a restricted (possibly disconnected) range.
+        """
+        lengths = np.array([b - a for a, b in self.intervals], dtype=float)
+        tot = lengths.sum()
+        if tot <= 0:
+            pts = np.array([(a + b) / 2 for a, b in self.intervals])
+            return pts[np.minimum((u * len(pts)).astype(int), len(pts) - 1)]
+        cum = np.concatenate([[0.0], np.cumsum(lengths)]) / tot
+        out = np.empty_like(u, dtype=float)
+        for i, (a, b) in enumerate(self.intervals):
+            sel = (u >= cum[i]) & (u <= cum[i + 1] if i == len(self.intervals) - 1 else u < cum[i + 1])
+            if lengths[i] > 0:
+                out[sel] = a + (u[sel] - cum[i]) / (cum[i + 1] - cum[i]) * (b - a)
+            else:
+                out[sel] = a
+        return out
+
+
+@dataclass(frozen=True)
+class Knob:
+    name: str
+
+    @property
+    def kind(self) -> str:
+        raise NotImplementedError
+
+    def default_value(self) -> Any:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class FloatKnob(Knob):
+    lo: float
+    hi: float
+    log: bool = False
+    default: Optional[float] = None
+    restriction: Optional[Intervals] = None  # in raw (untransformed) units
+
+    @property
+    def kind(self) -> str:
+        return "float"
+
+    def default_value(self) -> float:
+        return self.default if self.default is not None else (self.lo + self.hi) / 2
+
+    def _t(self, x: np.ndarray | float) -> np.ndarray | float:
+        return np.log(x) if self.log else x
+
+    def _it(self, t: np.ndarray | float) -> np.ndarray | float:
+        return np.exp(t) if self.log else t
+
+    def to_unit(self, x: np.ndarray | float) -> np.ndarray | float:
+        a, b = self._t(self.lo), self._t(self.hi)
+        return (self._t(x) - a) / (b - a)
+
+    def from_unit(self, u: np.ndarray | float) -> np.ndarray | float:
+        a, b = self._t(self.lo), self._t(self.hi)
+        return self._it(a + np.clip(u, 0.0, 1.0) * (b - a))
+
+    def active_intervals(self) -> Intervals:
+        if self.restriction is not None and self.restriction:
+            clipped = [
+                (max(a, self.lo), min(b, self.hi))
+                for a, b in self.restriction
+                if min(b, self.hi) >= max(a, self.lo)
+            ]
+            if clipped:
+                return Intervals(clipped)
+        return Intervals([(self.lo, self.hi)])
+
+
+@dataclass(frozen=True)
+class IntKnob(Knob):
+    lo: int
+    hi: int
+    log: bool = False
+    default: Optional[int] = None
+    restriction: Optional[Intervals] = None
+
+    @property
+    def kind(self) -> str:
+        return "int"
+
+    def default_value(self) -> int:
+        return self.default if self.default is not None else (self.lo + self.hi) // 2
+
+    def _t(self, x):
+        return np.log(x) if self.log else x
+
+    def _it(self, t):
+        return np.exp(t) if self.log else t
+
+    def to_unit(self, x):
+        a, b = self._t(self.lo), self._t(self.hi)
+        if b == a:
+            return np.zeros_like(np.asarray(x, dtype=float))
+        return (self._t(x) - a) / (b - a)
+
+    def from_unit(self, u):
+        a, b = self._t(self.lo), self._t(self.hi)
+        val = self._it(a + np.clip(u, 0.0, 1.0) * (b - a))
+        return np.clip(np.rint(val), self.lo, self.hi).astype(int)
+
+    def active_intervals(self) -> Intervals:
+        if self.restriction is not None and self.restriction:
+            clipped = [
+                (max(a, self.lo), min(b, self.hi))
+                for a, b in self.restriction
+                if min(b, self.hi) >= max(a, self.lo)
+            ]
+            if clipped:
+                return Intervals(clipped)
+        return Intervals([(float(self.lo), float(self.hi))])
+
+
+@dataclass(frozen=True)
+class CatKnob(Knob):
+    choices: Tuple[Any, ...]
+    default: Optional[Any] = None
+    restriction: Optional[Tuple[Any, ...]] = None
+
+    @property
+    def kind(self) -> str:
+        return "cat"
+
+    def default_value(self) -> Any:
+        return self.default if self.default is not None else self.choices[0]
+
+    def active_choices(self) -> Tuple[Any, ...]:
+        if self.restriction:
+            kept = tuple(c for c in self.choices if c in self.restriction)
+            if kept:
+                return kept
+        return self.choices
+
+    def to_unit(self, x) -> float:
+        i = self.choices.index(x)
+        return (i + 0.5) / len(self.choices)
+
+    def from_unit(self, u) -> Any:
+        i = min(int(np.clip(u, 0.0, 1.0 - 1e-9) * len(self.choices)), len(self.choices) - 1)
+        return self.choices[i]
+
+
+@dataclass(frozen=True)
+class BoolKnob(Knob):
+    default: bool = False
+    restriction: Optional[Tuple[bool, ...]] = None
+
+    @property
+    def kind(self) -> str:
+        return "bool"
+
+    def default_value(self) -> bool:
+        return self.default
+
+    def active_choices(self) -> Tuple[bool, ...]:
+        if self.restriction:
+            return self.restriction
+        return (False, True)
+
+    def to_unit(self, x) -> float:
+        return 0.75 if x else 0.25
+
+    def from_unit(self, u) -> bool:
+        return bool(u >= 0.5)
+
+
+Config = Dict[str, Any]
+
+
+class ConfigSpace:
+    """Ordered collection of knobs with encode/decode/sample/mutate."""
+
+    def __init__(self, knobs: Sequence[Knob]):
+        names = [k.name for k in knobs]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate knob names")
+        self.knobs: List[Knob] = list(knobs)
+        self.by_name: Dict[str, Knob] = {k.name: k for k in knobs}
+
+    # ------------------------------------------------------------------ basics
+    @property
+    def names(self) -> List[str]:
+        return [k.name for k in self.knobs]
+
+    @property
+    def dim(self) -> int:
+        return len(self.knobs)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.by_name
+
+    def __len__(self) -> int:
+        return len(self.knobs)
+
+    def default(self) -> Config:
+        return {k.name: k.default_value() for k in self.knobs}
+
+    # ------------------------------------------------------------- en/decoding
+    def encode(self, cfg: Config) -> np.ndarray:
+        """Config dict -> unit-cube vector (missing knobs -> default)."""
+        out = np.empty(self.dim, dtype=float)
+        for i, k in enumerate(self.knobs):
+            v = cfg.get(k.name, k.default_value())
+            out[i] = float(np.clip(k.to_unit(v), 0.0, 1.0))
+        return out
+
+    def encode_many(self, cfgs: Sequence[Config]) -> np.ndarray:
+        return np.stack([self.encode(c) for c in cfgs]) if cfgs else np.zeros((0, self.dim))
+
+    def decode(self, u: np.ndarray) -> Config:
+        return {k.name: k.from_unit(float(u[i])) for i, k in enumerate(self.knobs)}
+
+    # ---------------------------------------------------------------- sampling
+    def sample(self, rng: np.random.Generator, n: int = 1) -> List[Config]:
+        cfgs = []
+        for _ in range(n):
+            cfg: Config = {}
+            for k in self.knobs:
+                cfg[k.name] = self._sample_knob(k, rng)
+            cfgs.append(cfg)
+        return cfgs
+
+    def _sample_knob(self, k: Knob, rng: np.random.Generator) -> Any:
+        if isinstance(k, FloatKnob):
+            return float(k.active_intervals().sample(rng, 1)[0])
+        if isinstance(k, IntKnob):
+            v = k.active_intervals().sample(rng, 1)[0]
+            return int(np.clip(np.rint(v), k.lo, k.hi))
+        if isinstance(k, CatKnob):
+            return k.active_choices()[rng.integers(len(k.active_choices()))]
+        if isinstance(k, BoolKnob):
+            return bool(k.active_choices()[rng.integers(len(k.active_choices()))])
+        raise TypeError(k)
+
+    def lhs_sample(self, rng: np.random.Generator, n: int) -> List[Config]:
+        """Latin Hypercube Sampling (McKay et al.), restriction-aware."""
+        if n <= 0:
+            return []
+        cfgs: List[Config] = [dict() for _ in range(n)]
+        for k in self.knobs:
+            # stratified unit samples for this dimension
+            u = (rng.permutation(n) + rng.random(n)) / n
+            if isinstance(k, (FloatKnob, IntKnob)):
+                vals = k.active_intervals().quantile_map(u)
+                for j in range(n):
+                    v = vals[j]
+                    cfgs[j][k.name] = int(np.clip(np.rint(v), k.lo, k.hi)) if isinstance(k, IntKnob) else float(v)
+            elif isinstance(k, CatKnob):
+                ch = k.active_choices()
+                for j in range(n):
+                    cfgs[j][k.name] = ch[min(int(u[j] * len(ch)), len(ch) - 1)]
+            elif isinstance(k, BoolKnob):
+                ch = k.active_choices()
+                for j in range(n):
+                    cfgs[j][k.name] = bool(ch[min(int(u[j] * len(ch)), len(ch) - 1)])
+        return cfgs
+
+    # ---------------------------------------------------------------- mutation
+    def mutate(self, cfg: Config, rng: np.random.Generator, scale: float = 0.2, p: float = 0.3) -> Config:
+        """Gaussian-in-unit-space perturbation of a subset of knobs."""
+        out = dict(cfg)
+        for k in self.knobs:
+            if rng.random() > p:
+                continue
+            if isinstance(k, (FloatKnob, IntKnob)):
+                u = float(np.clip(k.to_unit(out.get(k.name, k.default_value())), 0, 1))
+                u = float(np.clip(u + rng.normal(0.0, scale), 0.0, 1.0))
+                v = k.from_unit(u)
+                iv = k.active_intervals()
+                v = iv.clip(float(v))
+                out[k.name] = int(np.clip(np.rint(v), k.lo, k.hi)) if isinstance(k, IntKnob) else float(v)
+            else:
+                out[k.name] = self._sample_knob(k, rng)
+        return out
+
+    # ------------------------------------------------------------- restriction
+    def project(self, cfg: Config) -> Config:
+        """Clip a config into the active (restricted) space."""
+        out: Config = {}
+        for k in self.knobs:
+            v = cfg.get(k.name, k.default_value())
+            if isinstance(k, FloatKnob):
+                out[k.name] = float(np.clip(k.active_intervals().clip(float(v)), k.lo, k.hi))
+            elif isinstance(k, IntKnob):
+                out[k.name] = int(np.clip(np.rint(k.active_intervals().clip(float(v))), k.lo, k.hi))
+            elif isinstance(k, CatKnob):
+                ch = k.active_choices()
+                out[k.name] = v if v in ch else ch[0]
+            elif isinstance(k, BoolKnob):
+                ch = k.active_choices()
+                out[k.name] = bool(v) if bool(v) in ch else ch[0]
+        return out
+
+    def restrict(
+        self,
+        keep: Optional[Sequence[str]] = None,
+        ranges: Optional[Dict[str, Intervals]] = None,
+        cat_subsets: Optional[Dict[str, Sequence[Any]]] = None,
+    ) -> "ConfigSpace":
+        """Return a new space with knobs dropped and/or ranges restricted.
+
+        Dropped knobs simply disappear from the space; the tuner pins them
+        to their defaults (the paper removes them from the search space).
+        """
+        keep_set = set(keep) if keep is not None else set(self.names)
+        new_knobs: List[Knob] = []
+        for k in self.knobs:
+            if k.name not in keep_set:
+                continue
+            if isinstance(k, (FloatKnob, IntKnob)) and ranges and k.name in ranges:
+                k = replace(k, restriction=ranges[k.name])
+            elif isinstance(k, CatKnob) and cat_subsets and k.name in cat_subsets:
+                k = replace(k, restriction=tuple(cat_subsets[k.name]))
+            elif isinstance(k, BoolKnob) and cat_subsets and k.name in cat_subsets:
+                k = replace(k, restriction=tuple(bool(c) for c in cat_subsets[k.name]))
+            new_knobs.append(k)
+        return ConfigSpace(new_knobs)
+
+    def complete(self, cfg: Config) -> Config:
+        """Fill missing knobs with defaults (used after knob-dropping)."""
+        out = self.default()
+        out.update({k: v for k, v in cfg.items() if k in self.by_name})
+        return out

@@ -1,0 +1,289 @@
+"""Surrogate models for Bayesian optimization.
+
+The primary surrogate is a Probabilistic Random Forest (paper §3.3 —
+"Probabilistic Random Forest [12]", i.e. the SMAC-style forest): an ensemble
+of randomized regression trees over the unit-cube encoding; the predictive
+mean is the mean of per-tree leaf means and the predictive variance combines
+across-tree disagreement with within-leaf empirical variance (law of total
+variance, as in Hutter et al. 2011).
+
+A small exact Gaussian Process (Matérn-5/2) is also provided — it is *not*
+used by MFTune itself but by the Tuneful baseline's multi-task GP.
+
+Everything is pure numpy; data sets here are O(10^2-10^3) points.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["RegressionTree", "ProbabilisticRandomForest", "GaussianProcess", "Surrogate"]
+
+
+class Surrogate:
+    """Minimal interface all surrogates implement."""
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "Surrogate":
+        raise NotImplementedError
+
+    def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Return (mean, variance), each shape (n,)."""
+        raise NotImplementedError
+
+    def predict_mean(self, X: np.ndarray) -> np.ndarray:
+        return self.predict(X)[0]
+
+
+# ---------------------------------------------------------------------------
+# Regression trees / random forest
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Node:
+    feature: int = -1            # -1 => leaf
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+
+
+class RegressionTree:
+    """CART regression tree with random feature subsetting at each split."""
+
+    def __init__(
+        self,
+        max_depth: int = 12,
+        min_samples_split: int = 4,
+        min_samples_leaf: int = 2,
+        max_features: Optional[int] = None,
+        rng: Optional[np.random.Generator] = None,
+    ):
+        self.max_depth = max_depth
+        self.min_samples_split = min_samples_split
+        self.min_samples_leaf = min_samples_leaf
+        self.max_features = max_features
+        self.rng = rng or np.random.default_rng()
+        self.nodes: List[_Node] = []
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RegressionTree":
+        X = np.asarray(X, dtype=float)
+        y = np.asarray(y, dtype=float)
+        self.nodes = []
+        self._build(X, y, np.arange(len(y)), 0)
+        self._freeze()
+        return self
+
+    def _new_node(self) -> int:
+        self.nodes.append(_Node())
+        return len(self.nodes) - 1
+
+    def _build(self, X: np.ndarray, y: np.ndarray, idx: np.ndarray, depth: int) -> int:
+        nid = self._new_node()
+        node = self.nodes[nid]
+        ysub = y[idx]
+        node.mean = float(ysub.mean())
+        node.var = float(ysub.var())
+        node.n = len(idx)
+        if depth >= self.max_depth or len(idx) < self.min_samples_split or np.ptp(ysub) == 0:
+            return nid
+        d = X.shape[1]
+        k = self.max_features or max(1, int(np.ceil(d / 1.5)))
+        feats = self.rng.permutation(d)[: min(k, d)]
+        best = None  # (score, feat, thr, mask)
+        for f in feats:
+            xs = X[idx, f]
+            order = np.argsort(xs, kind="stable")
+            xs_sorted = xs[order]
+            ys_sorted = ysub[order]
+            # candidate split positions between distinct values
+            csum = np.cumsum(ys_sorted)
+            csum2 = np.cumsum(ys_sorted**2)
+            n = len(idx)
+            pos = np.arange(self.min_samples_leaf, n - self.min_samples_leaf + 1)
+            if len(pos) == 0:
+                continue
+            valid = xs_sorted[pos - 1] < xs_sorted[np.minimum(pos, n - 1)]
+            pos = pos[valid[: len(pos)]] if len(valid) >= len(pos) else pos[valid]
+            if len(pos) == 0:
+                continue
+            nl = pos.astype(float)
+            nr = n - nl
+            sl, sr = csum[pos - 1], csum[-1] - csum[pos - 1]
+            s2l, s2r = csum2[pos - 1], csum2[-1] - csum2[pos - 1]
+            sse = (s2l - sl**2 / nl) + (s2r - sr**2 / nr)
+            j = int(np.argmin(sse))
+            if best is None or sse[j] < best[0]:
+                thr = 0.5 * (xs_sorted[pos[j] - 1] + xs_sorted[pos[j]])
+                best = (float(sse[j]), int(f), float(thr))
+        if best is None:
+            return nid
+        _, f, thr = best
+        mask = X[idx, f] <= thr
+        li, ri = idx[mask], idx[~mask]
+        if len(li) < self.min_samples_leaf or len(ri) < self.min_samples_leaf:
+            return nid
+        node.feature = f
+        node.threshold = thr
+        node.left = self._build(X, y, li, depth + 1)
+        node.right = self._build(X, y, ri, depth + 1)
+        return nid
+
+    def _freeze(self) -> None:
+        """Pack nodes into arrays for vectorized descent."""
+        n = len(self.nodes)
+        self._feat = np.array([nd.feature for nd in self.nodes], dtype=np.int64)
+        self._thr = np.array([nd.threshold for nd in self.nodes], dtype=float)
+        self._left = np.array([nd.left for nd in self.nodes], dtype=np.int64)
+        self._right = np.array([nd.right for nd in self.nodes], dtype=np.int64)
+        self._mean = np.array([nd.mean for nd in self.nodes], dtype=float)
+        self._var = np.array([nd.var for nd in self.nodes], dtype=float)
+
+    def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized descent: O(depth * n) per call."""
+        X = np.atleast_2d(np.asarray(X, dtype=float))
+        if not hasattr(self, "_feat"):
+            self._freeze()
+        nid = np.zeros(len(X), dtype=np.int64)
+        for _ in range(self.max_depth + 1):
+            feat = self._feat[nid]
+            active = feat >= 0
+            if not active.any():
+                break
+            ai = np.where(active)[0]
+            f = feat[ai]
+            go_left = X[ai, f] <= self._thr[nid[ai]]
+            nid[ai] = np.where(go_left, self._left[nid[ai]], self._right[nid[ai]])
+        return self._mean[nid], self._var[nid]
+
+
+class ProbabilisticRandomForest(Surrogate):
+    def __init__(
+        self,
+        n_trees: int = 10,
+        max_depth: int = 12,
+        min_samples_split: int = 4,
+        min_samples_leaf: int = 1,
+        bootstrap: bool = True,
+        seed: int = 0,
+    ):
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_samples_split = min_samples_split
+        self.min_samples_leaf = min_samples_leaf
+        self.bootstrap = bootstrap
+        self.seed = seed
+        self.trees: List[RegressionTree] = []
+        self._y_mean = 0.0
+        self._y_std = 1.0
+        self.X_: Optional[np.ndarray] = None
+        self.y_: Optional[np.ndarray] = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "ProbabilisticRandomForest":
+        X = np.atleast_2d(np.asarray(X, dtype=float))
+        y = np.asarray(y, dtype=float)
+        self.X_, self.y_ = X, y
+        self._y_mean = float(y.mean()) if len(y) else 0.0
+        self._y_std = float(y.std()) or 1.0
+        yn = (y - self._y_mean) / self._y_std
+        rng = np.random.default_rng(self.seed)
+        self.trees = []
+        n = len(y)
+        for t in range(self.n_trees):
+            trng = np.random.default_rng(rng.integers(2**63))
+            idx = trng.integers(0, n, n) if (self.bootstrap and n > 1) else np.arange(n)
+            tree = RegressionTree(
+                max_depth=self.max_depth,
+                min_samples_split=self.min_samples_split,
+                min_samples_leaf=self.min_samples_leaf,
+                rng=trng,
+            )
+            tree.fit(X[idx], yn[idx])
+            self.trees.append(tree)
+        return self
+
+    def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        X = np.atleast_2d(np.asarray(X, dtype=float))
+        if not self.trees:
+            return np.zeros(len(X)), np.ones(len(X))
+        ms = np.empty((self.n_trees, len(X)))
+        vs = np.empty((self.n_trees, len(X)))
+        for i, tree in enumerate(self.trees):
+            ms[i], vs[i] = tree.predict(X)
+        mean = ms.mean(axis=0)
+        # law of total variance across trees
+        var = vs.mean(axis=0) + ms.var(axis=0)
+        var = np.maximum(var, 1e-10)
+        return mean * self._y_std + self._y_mean, var * self._y_std**2
+
+
+# ---------------------------------------------------------------------------
+# Gaussian process (for the Tuneful MTGP baseline)
+# ---------------------------------------------------------------------------
+
+
+class GaussianProcess(Surrogate):
+    """Exact GP with Matérn-5/2 kernel, constant mean, jitter + noise MLE-lite.
+
+    Hyperparameters are set by a small grid search over (lengthscale, noise)
+    maximizing the log marginal likelihood — adequate at these data sizes.
+    """
+
+    def __init__(self, lengthscales=(0.1, 0.2, 0.5, 1.0, 2.0), noises=(1e-6, 1e-4, 1e-2)):
+        self.lengthscales = lengthscales
+        self.noises = noises
+        self.X_: Optional[np.ndarray] = None
+        self.alpha_: Optional[np.ndarray] = None
+        self.L_: Optional[np.ndarray] = None
+        self.ls_: float = 0.5
+        self.noise_: float = 1e-4
+        self._y_mean = 0.0
+        self._y_std = 1.0
+
+    @staticmethod
+    def _matern52(A: np.ndarray, B: np.ndarray, ls: float) -> np.ndarray:
+        d2 = np.maximum(
+            (A**2).sum(1)[:, None] + (B**2).sum(1)[None, :] - 2 * A @ B.T, 0.0
+        )
+        r = np.sqrt(d2) / ls
+        s5r = np.sqrt(5.0) * r
+        return (1 + s5r + 5 * d2 / (3 * ls**2)) * np.exp(-s5r)
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GaussianProcess":
+        X = np.atleast_2d(np.asarray(X, dtype=float))
+        y = np.asarray(y, dtype=float)
+        self._y_mean = float(y.mean()) if len(y) else 0.0
+        self._y_std = float(y.std()) or 1.0
+        yn = (y - self._y_mean) / self._y_std
+        best = (np.inf, None)
+        n = len(X)
+        for ls in self.lengthscales:
+            K0 = self._matern52(X, X, ls)
+            for noise in self.noises:
+                K = K0 + (noise + 1e-8) * np.eye(n)
+                try:
+                    L = np.linalg.cholesky(K)
+                except np.linalg.LinAlgError:
+                    continue
+                alpha = np.linalg.solve(L.T, np.linalg.solve(L, yn))
+                nll = 0.5 * yn @ alpha + np.log(np.diag(L)).sum()
+                if nll < best[0]:
+                    best = (nll, (ls, noise, L, alpha))
+        if best[1] is None:
+            raise RuntimeError("GP fit failed")
+        self.ls_, self.noise_, self.L_, self.alpha_ = best[1]
+        self.X_ = X
+        return self
+
+    def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        X = np.atleast_2d(np.asarray(X, dtype=float))
+        Ks = self._matern52(X, self.X_, self.ls_)
+        mean = Ks @ self.alpha_
+        v = np.linalg.solve(self.L_, Ks.T)
+        var = np.maximum(1.0 - (v**2).sum(axis=0), 1e-10)
+        return mean * self._y_std + self._y_mean, var * self._y_std**2

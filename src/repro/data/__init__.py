@@ -1,0 +1,3 @@
+from .pipeline import SyntheticTokenPipeline
+
+__all__ = ["SyntheticTokenPipeline"]

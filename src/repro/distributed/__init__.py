@@ -1,0 +1,12 @@
+from .sharding import (
+    assign_pspec,
+    cache_axes,
+    make_param_rules,
+    shardings_for_specs,
+    shardings_for_tree,
+)
+
+__all__ = [
+    "assign_pspec", "cache_axes", "make_param_rules",
+    "shardings_for_specs", "shardings_for_tree",
+]

@@ -1,0 +1,68 @@
+"""Gradient compression for cross-pod reduction.
+
+Two schemes, applied *before* the (implicit, XLA-inserted) gradient
+all-reduce so the wire format is small:
+
+  int8:  per-tensor symmetric quantization; dequantized immediately so the
+         value seen by the optimizer carries quantization error, exactly as
+         a quantized all-reduce would. (On real hardware the transport runs
+         in int8; XLA:CPU has no int8 all-reduce, so the arithmetic effect
+         is modeled and the collective-byte savings are accounted in the
+         roofline's collective term via RuntimeConfig.grad_compression.)
+
+  topk:  keep the largest-|g| fraction per tensor with error feedback kept
+         in a residual accumulator (stateful variant available through
+         ``ErrorFeedback``; the stateless call drops the residual).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_grads", "int8_roundtrip", "topk_mask", "ErrorFeedback"]
+
+
+def int8_roundtrip(g: jax.Array) -> jax.Array:
+    a = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.where(a > 0, a / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def topk_mask(g: jax.Array, frac: float = 0.1) -> jax.Array:
+    flat = jnp.abs(g.astype(jnp.float32)).reshape(-1)
+    k = max(int(flat.size * frac), 1)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(g.astype(jnp.float32)) >= thresh, g, 0).astype(g.dtype)
+
+
+def compress_grads(grads, scheme: str, topk_frac: float = 0.1):
+    if scheme == "int8":
+        return jax.tree.map(int8_roundtrip, grads)
+    if scheme == "topk":
+        return jax.tree.map(lambda g: topk_mask(g, topk_frac), grads)
+    return grads
+
+
+class ErrorFeedback:
+    """Residual-carrying top-k compression (EF-SGD style)."""
+
+    def init(self, grads):
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def compress(self, grads, residual, frac: float = 0.1):
+        def one(g, r):
+            acc = g.astype(jnp.float32) + r
+            kept = topk_mask(acc, frac).astype(jnp.float32)
+            return kept.astype(g.dtype), acc - kept
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = jax.tree.leaves(residual)
+        outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        return (
+            jax.tree.unflatten(treedef, [o[0] for o in outs]),
+            jax.tree.unflatten(treedef, [o[1] for o in outs]),
+        )

@@ -1,0 +1,169 @@
+"""Logical-axis -> mesh-axis sharding assignment.
+
+Rules map logical axis names to an ordered tuple of candidate mesh axes.
+``assign_pspec`` walks a shape left-to-right and gives each dimension the
+first candidate axis (or axis group) that (a) is present in the mesh,
+(b) hasn't been used by an earlier dimension of the same tensor, and
+(c) divides the dimension evenly. This one function produces every
+sharding in the system — params, optimizer states, activations, KV
+caches — so TP/FSDP/EP/SP layouts stay mutually consistent.
+
+Default layout:
+  model axis: TP (heads / mlp / experts / vocab / ssm_inner)
+  data axes (pod, data): batch DP + FSDP parameter sharding (ZeRO-3) +
+  sequence sharding for long-context caches whose batch can't split.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models.params import ParamSpec
+from ..models.runtime import Runtime
+
+__all__ = [
+    "make_param_rules", "assign_pspec", "shardings_for_specs",
+    "shardings_for_tree", "cache_axes", "batch_axes",
+]
+
+Rules = Dict[Optional[str], Tuple[str, ...]]
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_param_rules(rt: Runtime, mesh: Mesh) -> Rules:
+    d = _data_axes(mesh)
+    rules: Rules = {
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "experts": ("model",),
+        # fallback TP for MoE weights whose expert count can't divide the
+        # model axis (e.g. 8 experts on model=16): shard the FFN width
+        "expert_mlp": ("model",),
+        "ssm_inner": ("model",),
+        "rank": (),
+        "qk": (),
+        "layers": (),
+        "embed": d if rt.fsdp else (),
+        None: (),
+    }
+    return rules
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return _data_axes(mesh)
+
+
+def assign_pspec(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Rules,
+) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        cands = rules.get(ax, ())
+        if isinstance(cands, str):
+            cands = (cands,)
+        chosen: Tuple[str, ...] = ()
+        # try the full candidate group first (e.g. ("pod","data")), then singles
+        groups = [tuple(cands)] + [(c,) for c in cands] if len(cands) > 1 else [tuple(cands)]
+        for grp in groups:
+            grp = tuple(a for a in grp if a in sizes and a not in used)
+            if not grp:
+                continue
+            total = int(np.prod([sizes[a] for a in grp]))
+            if total > 1 and dim % total == 0:
+                chosen = grp
+                break
+        if chosen:
+            used.update(chosen)
+            parts.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            parts.append(None)
+    # drop trailing Nones for tidiness
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shardings_for_specs(specs, mesh: Mesh, rules: Rules):
+    """ParamSpec tree -> NamedSharding tree."""
+
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, assign_pspec(s.shape, s.axes, mesh, rules))
+
+    return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def shardings_for_tree(tree_axes, tree_shapes, mesh: Mesh, rules: Rules):
+    """Parallel trees of axis-tuples and shapes -> NamedSharding tree."""
+
+    def one(axes, shaped):
+        return NamedSharding(mesh, assign_pspec(shaped.shape, axes, mesh, rules))
+
+    return jax.tree.map(one, tree_axes, tree_shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+# ------------------------------------------------------------------- caches
+
+
+def cache_axes(cfg: ArchConfig, cache) -> Any:
+    """Logical axes for each cache leaf (parallel tree to init_cache)."""
+    fam = cfg.family
+
+    def ax(leaf_name: str, ndim: int) -> Tuple:
+        table = {
+            # (L, B, S, Hkv, hd)
+            "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "attn_k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "attn_v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "enc_k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "enc_v": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "c_kv": ("layers", "batch", "kv_seq", None),
+            "k_rope": ("layers", "batch", "kv_seq", None),
+            "ssm": ("layers", "batch", "heads", None, None),
+            "conv": ("layers", "batch", None, "ssm_inner"),
+            "wkv": ("layers", "batch", "heads", None, None),
+            "shift1": ("layers", "batch", None, "embed_act"),
+            "shift2": ("layers", "batch", None, "embed_act"),
+            "pos": ("batch",),
+        }
+        return table[leaf_name][:ndim]
+
+    return {k: ax(k, np.ndim(v) if not hasattr(v, "shape") else len(v.shape))
+            for k, v in cache.items()}
+
+
+def cache_rules(rt: Runtime, mesh: Mesh, batch_shardable: bool) -> Rules:
+    d = _data_axes(mesh)
+    return {
+        "layers": (),
+        "batch": d if batch_shardable else (),
+        # KV sequence takes the model axis (ring-decode layout: each model
+        # shard holds a slice of the context; softmax reduces across shards).
+        # Essential when kv_heads < model-axis size — head sharding can't
+        # divide, and a replicated 32k cache is tens of GB/device. When the
+        # batch can't shard either (long-context B=1), sequence absorbs the
+        # data axes too.
+        "kv_seq": ("model",) if batch_shardable else d + ("model",),
+        "kv_heads": ("model",),
+        "heads": ("model",),
+        "ssm_inner": ("model",),
+        "embed_act": (),
+        None: (),
+    }

@@ -1,0 +1,3 @@
+from .workload import CellWorkload, runtime_space
+
+__all__ = ["CellWorkload", "runtime_space"]

@@ -1,0 +1,135 @@
+"""jaxwl: the framework's own distributed configuration as an MFTune
+workload (the beyond-paper objective, DESIGN.md §5).
+
+Queries = (arch x shape) cells. Latency of a query under a configuration =
+the three-term v5e roofline step time of the cell's compiled HLO with that
+runtime configuration. Evaluations lower+compile real programs (minutes on
+one CPU core), so results are cached by (cell, canonical-config) — the C1
+"prohibitively expensive evaluation" regime the paper targets, in genuine
+form.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.space import BoolKnob, CatKnob, ConfigSpace, FloatKnob, IntKnob
+from ..tuneapi import EvalResult, Workload
+
+__all__ = ["CellWorkload", "runtime_space"]
+
+Config = Dict[str, Any]
+
+
+def runtime_space() -> ConfigSpace:
+    """Tunable runtime knobs that change the compiled program."""
+    return ConfigSpace([
+        CatKnob("remat", ("none", "dots", "full"), default="full"),
+        BoolKnob("seq_shard", default=True),
+        BoolKnob("fsdp", default=True),
+        CatKnob("attn_chunk", (512, 1024, 2048, 4096), default=1024),
+        CatKnob("scan_unroll", (1, 2), default=1),
+        FloatKnob("capacity_factor", 1.0, 2.0, default=1.25),
+        CatKnob("opt_state_dtype", ("float32", "bfloat16"), default="float32"),
+        BoolKnob("act_shard", default=True),
+    ])
+
+
+class CellWorkload(Workload):
+    def __init__(
+        self,
+        cells: Sequence[Tuple[str, str]],
+        multi_pod: bool = False,
+        cache_path: str = ".cache/jaxwl_evals.json",
+    ):
+        self.cells = list(cells)
+        self.multi_pod = multi_pod
+        self._space = runtime_space()
+        self.task_id = "jaxwl-" + "-".join(f"{a}.{s}" for a, s in self.cells)
+        self.cache_path = cache_path
+        self._cache: Dict[str, float] = {}
+        if cache_path and os.path.exists(cache_path):
+            with open(cache_path) as f:
+                self._cache = json.load(f)
+
+    @property
+    def queries(self) -> List[str]:
+        return [f"{a}:{s}" for a, s in self.cells]
+
+    @property
+    def space(self) -> ConfigSpace:
+        return self._space
+
+    # ------------------------------------------------------------------ eval
+    def _key(self, cell: Tuple[str, str], cfg: Config) -> str:
+        canon = json.dumps({k: cfg[k] for k in sorted(cfg)}, default=str)
+        return f"{cell[0]}|{cell[1]}|{'mp' if self.multi_pod else 'sp'}|{canon}"
+
+    def _overrides(self, cfg: Config, shape_kind: str) -> Dict[str, Any]:
+        ov = dict(cfg)
+        # decode/prefill cells never remat and ignore seq_shard-for-carries
+        if shape_kind != "train":
+            ov["remat"] = "none"
+            ov["seq_shard"] = False
+        return ov
+
+    def _eval_cell(self, cell: Tuple[str, str], cfg: Config) -> Optional[float]:
+        key = self._key(cell, cfg)
+        if key in self._cache:
+            return self._cache[key]
+        from ..configs import SHAPES
+        from ..launch.dryrun import run_cell
+
+        shape = SHAPES[cell[1]]
+        try:
+            r = run_cell(cell[0], cell[1], self.multi_pod, self._overrides(cfg, shape.kind))
+        except Exception:
+            self._cache[key] = -1.0
+            self._persist()
+            return None
+        if r.get("status") != "ok":
+            self._cache[key] = -1.0
+            self._persist()
+            return None
+        t = float(r["roofline"]["step_time_s"])
+        self._cache[key] = t
+        self._persist()
+        return t
+
+    def _persist(self) -> None:
+        if not self.cache_path:
+            return
+        os.makedirs(os.path.dirname(self.cache_path) or ".", exist_ok=True)
+        with open(self.cache_path + ".tmp", "w") as f:
+            json.dump(self._cache, f)
+        os.replace(self.cache_path + ".tmp", self.cache_path)
+
+    def evaluate(
+        self,
+        config: Config,
+        query_indices: Optional[Sequence[int]] = None,
+        cost_cap: Optional[float] = None,
+        data_fraction: float = 1.0,
+    ) -> EvalResult:
+        cfg = dict(self._space.default(), **config)
+        idx = list(query_indices) if query_indices is not None else range(len(self.cells))
+        lats: List[float] = []
+        total = 0.0
+        for qi in idx:
+            t = self._eval_cell(self.cells[qi], cfg)
+            if t is None or t < 0:
+                return EvalResult(per_query_latency=lats + [float("inf")],
+                                  per_query_cost=lats + [0.0], failed=True,
+                                  failure_reason="compile_error")
+            if cost_cap is not None and total + t > cost_cap:
+                return EvalResult(per_query_latency=lats + [t],
+                                  per_query_cost=lats + [max(cost_cap - total, 0.0)],
+                                  failed=True, failure_reason="early_stop")
+            lats.append(t)
+            total += t
+        return EvalResult(per_query_latency=lats, per_query_cost=list(lats))
+
+    def meta_features(self) -> Optional[List[float]]:
+        return None

@@ -1,0 +1,242 @@
+"""FlashAttention-2 Pallas TPU kernels (forward + backward).
+
+TPU mapping: the grid walks (batch*kv_heads, q_blocks); each program
+instance streams KV blocks through VMEM with a fori_loop, carrying the
+running (m, l, acc) in f32 VMEM scratch. Block shapes put the
+last-two-dims at MXU-friendly multiples (q_block x head_dim, head_dim
+multiple of 128 where the arch allows); the (G*Dq) flattening keeps the
+grouped-query heads contiguous in lanes. Backward runs two kernels, dq
+(grid over q blocks) and dkv (grid over kv blocks), each recomputing p
+from the saved lse — the HBM<->VMEM traffic profile of FA-2.
+
+Masking is positional (block-offset arithmetic in-kernel), so causal and
+sliding-window variants share one kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_fwd_pallas", "flash_dq_pallas", "flash_dkv_pallas"]
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: Optional[int]):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), jnp.bool_)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, causal, window,
+                q_offset, kv_block, n_kv, scale):
+    qi = pl.program_id(1)
+    qb, G, D = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    Dv = v_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32) * scale            # (qb, G, D)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(ki * kv_block, kv_block)].astype(jnp.float32)   # (kb, D)
+        v = v_ref[0, pl.ds(ki * kv_block, kv_block)].astype(jnp.float32)   # (kb, Dv)
+        s = jax.lax.dot_general(q.reshape(qb * G, D), k,
+                                (((1,), (1,)), ((), ()))).reshape(qb, G, kv_block)
+        qpos = q_offset + qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, 1), 0)[:, 0]
+        kpos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32, (kv_block, 1), 0)[:, 0]
+        msk = _mask(qpos, kpos, causal, window)
+        s = jnp.where(msk[:, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(p.reshape(qb * G, kv_block), v,
+                                 (((1,), (0,)), ((), ()))).reshape(qb, G, Dv)
+        acc = acc * corr[..., None] + pv
+        return m_new, l_new, acc
+
+    m0 = jnp.full((qb, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((qb, G), jnp.float32)
+    a0 = jnp.zeros((qb, G, Dv), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(o_ref.dtype)
+    lse_ref[0] = (m + jnp.log(jnp.maximum(l, 1e-30))).astype(lse_ref.dtype)
+
+
+def flash_fwd_pallas(q, k, v, *, causal=True, window=None, q_offset=0,
+                     q_block=128, kv_block=128, interpret=True):
+    """q: (BH, Sq, G, D); k/v: (BH, Sk, D*). BH = batch*kv_heads (pre-fused).
+    Returns (o, lse)."""
+    BH, Sq, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    assert Sq % q_block == 0 and Sk % kv_block == 0
+    grid = (BH, Sq // q_block)
+    scale = 1.0 / np.sqrt(D)
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, window=window, q_offset=q_offset,
+        kv_block=kv_block, n_kv=Sk // kv_block, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, G, D), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, Sk, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Sk, Dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_block, G, Dv), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, q_block, G), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq, G, Dv), q.dtype),
+            jax.ShapeDtypeStruct((BH, Sq, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ----------------------------------------------------------------- backward
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+               causal, window, q_offset, kv_block, n_kv, scale):
+    qi = pl.program_id(1)
+    qb, G, D = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)                  # (qb, G, Dv)
+    lse = lse_ref[0]                                    # (qb, G)
+    delta = delta_ref[0]                                # (qb, G)
+
+    def body(ki, dq):
+        k = k_ref[0, pl.ds(ki * kv_block, kv_block)].astype(jnp.float32)
+        v = v_ref[0, pl.ds(ki * kv_block, kv_block)].astype(jnp.float32)
+        s = jax.lax.dot_general((q * scale).reshape(qb * G, D), k,
+                                (((1,), (1,)), ((), ()))).reshape(qb, G, kv_block)
+        qpos = q_offset + qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, 1), 0)[:, 0]
+        kpos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32, (kv_block, 1), 0)[:, 0]
+        s = jnp.where(_mask(qpos, kpos, causal, window)[:, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])
+        dp = jax.lax.dot_general(do.reshape(qb * G, -1), v,
+                                 (((1,), (1,)), ((), ()))).reshape(qb, G, kv_block)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jax.lax.dot_general(ds.reshape(qb * G, kv_block), k,
+                                      (((1,), (0,)), ((), ()))).reshape(qb, G, D)
+        return dq
+
+    dq = jax.lax.fori_loop(0, n_kv, body, jnp.zeros((qb, G, D), jnp.float32))
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def flash_dq_pallas(q, k, v, do, lse, delta, *, causal=True, window=None,
+                    q_offset=0, q_block=128, kv_block=128, interpret=True):
+    BH, Sq, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    grid = (BH, Sq // q_block)
+    kernel = functools.partial(
+        _dq_kernel, causal=causal, window=window, q_offset=q_offset,
+        kv_block=kv_block, n_kv=Sk // kv_block, scale=1.0 / np.sqrt(D),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, G, D), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, Sk, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Sk, Dv), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, q_block, G, Dv), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, q_block, G), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, q_block, G), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, G, D), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, G, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *,
+                causal, window, q_offset, q_block, n_q, scale):
+    ki = pl.program_id(1)
+    kb, D = k_ref.shape[1], k_ref.shape[2]
+    G = q_ref.shape[2]
+    Dv = v_ref.shape[-1]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+
+    def body(qi, carry):
+        dk, dv = carry
+        q = q_ref[0, pl.ds(qi * q_block, q_block)].astype(jnp.float32)       # (qb,G,D)
+        do = do_ref[0, pl.ds(qi * q_block, q_block)].astype(jnp.float32)
+        lse = lse_ref[0, pl.ds(qi * q_block, q_block)]
+        delta = delta_ref[0, pl.ds(qi * q_block, q_block)]
+        s = jax.lax.dot_general((q * scale).reshape(q_block * G, D), k,
+                                (((1,), (1,)), ((), ()))).reshape(q_block, G, kb)
+        qpos = q_offset + qi * q_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, 1), 0)[:, 0]
+        kpos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (kb, 1), 0)[:, 0]
+        s = jnp.where(_mask(qpos, kpos, causal, window)[:, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                                      # (qb,G,kb)
+        dv = dv + jax.lax.dot_general(p.reshape(q_block * G, kb),
+                                      do.reshape(q_block * G, Dv),
+                                      (((0,), (0,)), ((), ())))
+        dp = jax.lax.dot_general(do.reshape(q_block * G, Dv), v,
+                                 (((1,), (1,)), ((), ()))).reshape(q_block, G, kb)
+        ds = p * (dp - delta[..., None]) * scale
+        dk = dk + jax.lax.dot_general(ds.reshape(q_block * G, kb),
+                                      q.reshape(q_block * G, D),
+                                      (((0,), (0,)), ((), ())))
+        return dk, dv
+
+    dk0 = jnp.zeros((kb, D), jnp.float32)
+    dv0 = jnp.zeros((kb, Dv), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, n_q, body, (dk0, dv0))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def flash_dkv_pallas(q, k, v, do, lse, delta, *, causal=True, window=None,
+                     q_offset=0, q_block=128, kv_block=128, interpret=True):
+    BH, Sq, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    grid = (BH, Sk // kv_block)
+    kernel = functools.partial(
+        _dkv_kernel, causal=causal, window=window, q_offset=q_offset,
+        q_block=q_block, n_q=Sq // q_block, scale=1.0 / np.sqrt(D),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Sq, G, D), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((1, kv_block, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, kv_block, Dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Sq, G, Dv), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((1, Sq, G), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Sq, G), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kv_block, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, kv_block, Dv), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sk, D), k.dtype),
+            jax.ShapeDtypeStruct((BH, Sk, Dv), v.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)

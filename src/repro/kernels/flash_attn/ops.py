@@ -1,0 +1,76 @@
+"""Jit'd public wrapper: custom-VJP flash attention backed by the Pallas
+kernels. Layout adapter: model code uses (B, S, Hkv, G, D); the kernels run
+on (B*Hkv, S, G, D) so the grid's leading axis fuses batch and KV heads.
+
+``interpret=True`` (the CPU-validation mode) is the default off-TPU; on a
+TPU runtime pass interpret=False for the compiled path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_dkv_pallas, flash_dq_pallas, flash_fwd_pallas
+
+__all__ = ["flash_attention"]
+
+
+def _to_kernel_layout(q, k, v):
+    B, Sq, Hkv, G, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    qk = q.transpose(0, 2, 1, 3, 4).reshape(B * Hkv, Sq, G, D)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, Dv)
+    return qk, kk, vk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, q_offset, q_block, kv_block, interpret):
+    o, _ = flash_fwd_pallas(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                            q_block=q_block, kv_block=kv_block, interpret=interpret)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, q_block, kv_block, interpret):
+    o, lse = flash_fwd_pallas(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                              q_block=q_block, kv_block=kv_block, interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, q_offset, q_block, kv_block, interpret, res, do):
+    q, k, v, o, lse = res
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    kw = dict(causal=causal, window=window, q_offset=q_offset,
+              q_block=q_block, kv_block=kv_block, interpret=interpret)
+    dq = flash_dq_pallas(q, k, v, do, lse, delta, **kw)
+    dk, dv = flash_dkv_pallas(q, k, v, do, lse, delta, **kw)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "q_block", "kv_block", "interpret"))
+def flash_attention(
+    q: jax.Array,            # (B, Sq, Hkv, G, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,            # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Sq, Hkv, G, D = q.shape
+    Dv = v.shape[-1]
+    qk, kk, vk = _to_kernel_layout(q, k, v)
+    o = _flash(qk, kk, vk, causal, window, q_offset,
+               min(q_block, Sq), min(kv_block, k.shape[1]), interpret)
+    return o.reshape(B, Hkv, Sq, G, Dv).transpose(0, 2, 1, 3, 4)

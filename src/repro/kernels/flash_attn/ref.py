@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / GQA)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,            # (B, Sq, Hkv, G, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,            # (B, Sk, Hkv, Dv)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, Sq, Hkv, G, D = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    qp = q_offset + jnp.arange(Sq)
+    kp = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window is not None:
+        mask &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(mask[:, None, None, :][None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32)).astype(q.dtype)

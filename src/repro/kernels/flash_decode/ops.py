@@ -1,0 +1,27 @@
+"""Jit'd wrapper for split-KV decode attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_decode_pallas
+
+__all__ = ["decode_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("kv_splits", "kv_block", "interpret"))
+def decode_attention(q, k, v, lengths, *, kv_splits=4, kv_block=128, interpret=True):
+    """q: (B, Hkv, G, D); k/v: (B, S, Hkv, D*); lengths: (B,).
+    Returns (B, Hkv, G, Dv)."""
+    B, Hkv, G, D = q.shape
+    S, Dv = k.shape[1], v.shape[-1]
+    qk = q.reshape(B * Hkv, G, D)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dv)
+    lens = jnp.repeat(lengths, Hkv)
+    o = flash_decode_pallas(qk, kk, vk, lens, kv_splits=kv_splits,
+                            kv_block=kv_block, interpret=interpret)
+    return o.reshape(B, Hkv, G, Dv)

@@ -1,0 +1,21 @@
+"""Oracle for single-token decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["decode_ref"]
+
+
+def decode_ref(q, k, v, lengths):
+    """q: (B, Hkv, G, D); k/v: (B, S, Hkv, D*); lengths: (B,) valid prefix.
+    Returns (B, Hkv, G, Dv)."""
+    B, S = k.shape[:2]
+    s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / np.sqrt(q.shape[-1])
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""Mamba2 SSD chunk-scan Pallas kernel (forward).
+
+Grid: (batch*heads,). Each program instance owns one (b, h) stream and
+walks the chunks with a fori_loop, carrying the (P, N) state in VMEM
+scratch-equivalent registers. Within a chunk everything is dense matmul
+(MXU): the intra-chunk quadratic form with the separable decay mask, the
+state read (C . h) and the state update (decay-weighted B^T x). Chunk
+size is the VMEM knob: (c x c) + 2(c x N) + (c x P) tiles.
+
+Backward uses the pure-jnp sequential oracle under jax.checkpoint (the
+SSD backward is itself a scan; recompute-based AD through the oracle is
+exact and O(S) — see ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_fwd_pallas"]
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, a_ref, y_ref, hout_ref, *, chunk, n_chunks):
+    P = x_ref.shape[-1]
+    N = b_ref.shape[-1]
+
+    def chunk_body(ci, h):
+        sl = pl.ds(ci * chunk, chunk)
+        xk = x_ref[0, sl].astype(jnp.float32)        # (c, P)
+        bk = b_ref[0, sl].astype(jnp.float32)        # (c, N)
+        ck = c_ref[0, sl].astype(jnp.float32)        # (c, N)
+        ak = a_ref[0, sl].astype(jnp.float32)        # (c,)
+        cs = jnp.cumsum(ak)                          # (c,)
+        total = cs[-1]
+        # intra-chunk: y_q += sum_{s<=q} exp(cs_q - cs_s) (C_q.B_s) x_s
+        rel = cs[:, None] - cs[None, :]
+        tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+               >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+        L = jnp.where(tri, jnp.exp(rel), 0.0)
+        scores = jax.lax.dot_general(ck, bk, (((1,), (1,)), ((), ()))) * L   # (c, c)
+        y = jax.lax.dot_general(scores, xk, (((1,), (0,)), ((), ())))        # (c, P)
+        # state read
+        y = y + jax.lax.dot_general(ck * jnp.exp(cs)[:, None], h,
+                                    (((1,), (1,)), ((), ())))                 # (c, P) via (N,P)->wait
+        # state update: h' = exp(total) h + sum_s exp(total - cs_s) x_s^T B_s
+        w = jnp.exp(total - cs)[:, None]
+        h = jnp.exp(total) * h + jax.lax.dot_general(xk * 1.0, bk * w,
+                                                     (((0,), (0,)), ((), ())))  # (P, N)
+        y_ref[0, sl] = y.astype(y_ref.dtype)
+        return h
+
+    h0 = jnp.zeros((P, N), jnp.float32)
+    h = jax.lax.fori_loop(0, n_chunks, chunk_body, h0)
+    hout_ref[0] = h
+
+
+def ssd_fwd_pallas(x, B, C, a, *, chunk=64, interpret=True):
+    """x: (BH, S, P); B/C: (BH, S, N); a: (BH, S). Returns (y, h_final)."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=S // chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, S, P), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S, N), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, P), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, P, N), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, B, C, a)

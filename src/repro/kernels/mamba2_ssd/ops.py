@@ -1,0 +1,48 @@
+"""Jit'd wrapper: Pallas SSD forward + recompute-based exact backward.
+
+The backward differentiates the sequential oracle (itself a scan) under
+recompute — exact gradients, O(S) memory, no transposed kernel needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_fwd_pallas
+from .ref import ssd_ref
+
+__all__ = ["ssd_scan"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _ssd(x, B, C, a, chunk, interpret):
+    y, _ = ssd_fwd_pallas(x, B, C, a, chunk=chunk, interpret=interpret)
+    return y
+
+
+def _ssd_fwd(x, B, C, a, chunk, interpret):
+    y, _ = ssd_fwd_pallas(x, B, C, a, chunk=chunk, interpret=interpret)
+    return y, (x, B, C, a)
+
+
+def _ssd_bwd(chunk, interpret, res, dy):
+    x, B, C, a = res
+    # oracle expects (Bt, S, H, P) layout; our kernel layout folds H into Bt
+    def f(x_, B_, C_, a_):
+        y, _ = ssd_ref(x_[:, :, None, :], B_[:, :, None, :], C_[:, :, None, :], a_[:, :, None])
+        return y[:, :, 0, :]
+
+    _, vjp = jax.vjp(f, x, B, C, a)
+    return vjp(dy)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, B, C, a, *, chunk=64, interpret=True):
+    """x: (BH, S, P); B/C: (BH, S, N); a: (BH, S) log decay. Returns y."""
+    return _ssd(x, B, C, a, chunk, interpret)

@@ -1,0 +1,33 @@
+"""Oracle for the Mamba2 SSD chunk: sequential recurrence, O(S) exact.
+
+h_t = exp(a_t) h_{t-1} + B_t x_t^T ;  y_t = C_t . h_t
+(scalar-identity A per head; a_t = log-decay <= 0).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_ref"]
+
+
+def ssd_ref(x, B, C, a, h0=None):
+    """x: (Bt, S, H, P); B/C: (Bt, S, H, N); a: (Bt, S, H) log decay.
+    Returns (y (Bt,S,H,P), h_final (Bt,H,P,N))."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    h = jnp.zeros((Bt, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, Bt_, Ct, at = inp
+        h = h * jnp.exp(at.astype(jnp.float32))[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", Bt_.astype(jnp.float32), xt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct.astype(jnp.float32))
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), B.transpose(1, 0, 2, 3),
+          C.transpose(1, 0, 2, 3), a.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the grouped expert matmul."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gmm_pallas
+
+__all__ = ["grouped_matmul"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_matmul(x, w, group_sizes=None, interpret: bool = True):
+    """x: (E, C, D) dispatched tokens; w: (E, D, F) expert weights."""
+    return gmm_pallas(x, w, group_sizes, interpret=interpret)

@@ -1,0 +1,19 @@
+"""Oracle for the grouped (per-expert) matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gmm_ref"]
+
+
+def gmm_ref(x, w, group_sizes=None):
+    """x: (E, C, D); w: (E, D, F); group_sizes: (E,) valid rows per expert
+    (padded rows are zeroed). Returns (E, C, F)."""
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32))
+    if group_sizes is not None:
+        C = x.shape[1]
+        valid = jnp.arange(C)[None, :] < group_sizes[:, None]
+        out = jnp.where(valid[..., None], out, 0.0)
+    return out.astype(x.dtype)

@@ -1,0 +1,40 @@
+"""Jit'd custom-VJP wrapper for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_bwd_pallas, rmsnorm_fwd_pallas
+
+__all__ = ["rmsnorm"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm(x, w, eps, interpret):
+    o, _ = rmsnorm_fwd_pallas(x, w, eps=eps, interpret=interpret)
+    return o
+
+
+def _fwd(x, w, eps, interpret):
+    o, rstd = rmsnorm_fwd_pallas(x, w, eps=eps, interpret=interpret)
+    return o, (x, w, rstd)
+
+
+def _bwd(eps, interpret, res, do):
+    x, w, rstd = res
+    dx, dw = rmsnorm_bwd_pallas(x, w, rstd, do, interpret=interpret)
+    return dx, dw
+
+
+_rmsnorm.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5, interpret: bool = True) -> jax.Array:
+    """x: (..., D). Fused RMSNorm with Pallas fwd+bwd."""
+    shape = x.shape
+    out = _rmsnorm(x.reshape(-1, shape[-1]), w, eps, interpret)
+    return out.reshape(shape)

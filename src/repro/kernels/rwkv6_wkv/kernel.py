@@ -1,0 +1,85 @@
+"""RWKV6 chunked WKV Pallas kernel (forward).
+
+Grid: (batch*heads,). Chunked parallel form with the *separable* decay
+factorization (exp(cs_q - w_q - cs_s) = exp(cs_q - w_q - m) * exp(m - cs_s))
+so the intra-chunk attention is two MXU matmuls — never a (c, c, K)
+tensor. The per-channel (K, K) state streams through the chunks in a
+fori_loop. The midpoint shift m keeps both factors within f32 range for
+chunk <= 64 given the model's decay floor (see models/rwkv6.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["wkv_fwd_pallas"]
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, *, chunk, n_chunks):
+    K = r_ref.shape[-1]
+    u = u_ref[0].astype(jnp.float32)                 # (K,)
+
+    def body(ci, s):
+        sl = pl.ds(ci * chunk, chunk)
+        rk = r_ref[0, sl].astype(jnp.float32)        # (c, K)
+        kk = k_ref[0, sl].astype(jnp.float32)
+        vk = v_ref[0, sl].astype(jnp.float32)
+        wk = w_ref[0, sl].astype(jnp.float32)
+        cs = jnp.cumsum(wk, axis=0)                  # (c, K)
+        total = cs[-1]                               # (K,)
+        # state contribution
+        y = jax.lax.dot_general(rk * jnp.exp(cs - wk), s, (((1,), (0,)), ((), ())))
+        # intra-chunk, separable factorization (strictly lower triangular)
+        m = 0.5 * (total - wk[0])
+        r_f = rk * jnp.exp(cs - wk - m[None, :])
+        k_f = kk * jnp.exp(m[None, :] - cs)
+        att = jax.lax.dot_general(r_f, k_f, (((1,), (1,)), ((), ())))   # (c, c)
+        tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+               > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+        att = jnp.where(tri, att, 0.0)
+        y = y + jax.lax.dot_general(att, vk, (((1,), (0,)), ((), ())))
+        # bonus (current token)
+        y = y + (rk * u[None, :] * kk).sum(-1, keepdims=True) * vk
+        # state update
+        wts = jnp.exp(total[None, :] - cs)
+        s = jnp.exp(total)[:, None] * s + jax.lax.dot_general(
+            kk * wts, vk, (((0,), (0,)), ((), ())))
+        y_ref[0, sl] = y.astype(y_ref.dtype)
+        return s
+
+    s0 = jnp.zeros((K, K), jnp.float32)
+    s = jax.lax.fori_loop(0, n_chunks, body, s0)
+    sout_ref[0] = s
+
+
+def wkv_fwd_pallas(r, k, v, w, u, *, chunk=32, interpret=True):
+    """r/k/v/w: (BH, S, K); u: (BH, K) per-head bonus. Returns (y, S_final)."""
+    BH, S, K = r.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=S // chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, S, K), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S, K), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S, K), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S, K), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, K), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, K), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, K, K), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, K), r.dtype),
+            jax.ShapeDtypeStruct((BH, K, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, w, u)

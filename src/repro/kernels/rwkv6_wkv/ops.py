@@ -1,0 +1,49 @@
+"""Jit'd wrapper: Pallas WKV forward + recompute backward via the oracle."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv_fwd_pallas
+from .ref import wkv_ref
+
+__all__ = ["wkv_scan"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _wkv(r, k, v, w, u, chunk, interpret):
+    y, _ = wkv_fwd_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return y
+
+
+def _wkv_fwd(r, k, v, w, u, chunk, interpret):
+    y, _ = wkv_fwd_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return y, (r, k, v, w, u)
+
+
+def _wkv_bwd(chunk, interpret, res, dy):
+    r, k, v, w, u = res
+
+    # per-(b,h) u rows: oracle wants (H,K); kernel layout fuses BH — treat
+    # each row independently by vmapping the single-head oracle
+    def g(r_, k_, v_, w_, u_):
+        def one(rr, kk, vv, ww, uu):
+            y, _ = wkv_ref(rr[None, :, None, :], kk[None, :, None, :],
+                           vv[None, :, None, :], ww[None, :, None, :], uu[None, :])
+            return y[0, :, 0, :]
+        return jax.vmap(one)(r_, k_, v_, w_, u_)
+
+    _, vjp = jax.vjp(g, r, k, v, w, u)
+    return vjp(dy)
+
+
+_wkv.defvjp(_wkv_fwd, _wkv_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_scan(r, k, v, w, u, *, chunk=32, interpret=True):
+    """r/k/v/w: (BH, S, K); u: (BH, K). Returns y (BH, S, K)."""
+    return _wkv(r, k, v, w, u, chunk, interpret)

@@ -1,0 +1,30 @@
+"""Oracle for the RWKV6 WKV recurrence (sequential, exact).
+
+S_t = diag(exp(w_t)) S_{t-1} + k_t^T v_t
+y_t = r_t S_{t-1} + (r_t . (u * k_t)) v_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv_ref"]
+
+
+def wkv_ref(r, k, v, w, u, S0=None):
+    """r/k/v: (B, S, H, K); w: (B, S, H, K) log decay; u: (H, K).
+    Returns (y (B,S,H,K), S_final (B,H,K,K))."""
+    B, S, H, K = r.shape
+    state = jnp.zeros((B, H, K, K), jnp.float32) if S0 is None else S0
+
+    def step(s, inp):
+        rt, kt, vt, wt = (z.astype(jnp.float32) for z in inp)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        y = y + (rt * u[None] * kt).sum(-1, keepdims=True) * vt
+        s = jnp.exp(wt)[..., None] * s + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return s, y
+
+    xs = tuple(z.transpose(1, 0, 2, 3) for z in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state

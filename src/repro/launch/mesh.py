@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is a second-level data-parallel axis whose collectives cross
+the inter-pod links (DCN on real deployments); gradient compression
+(distributed/compression.py) targets exactly that axis.
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_mesh_shape"]
+
+
+def make_mesh_shape(n_devices: int, model: int = 16, multi_pod: bool = False):
+    if multi_pod:
+        pods = 2
+        data = n_devices // (pods * model)
+        return (pods, data, model), ("pod", "data", "model")
+    data = n_devices // model
+    return (data, model), ("data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False, model: int = 16):
+    n = 512 if multi_pod else 256
+    shape, axes = make_mesh_shape(n, model=model, multi_pod=multi_pod)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for the {'multi' if multi_pod else 'single'}-pod "
+            f"mesh, have {len(devs)} — set XLA_FLAGS=--xla_force_host_platform_device_count={n}"
+        )
+    # more devices than needed (e.g. 512 forced, single-pod 256): subset mesh
+    grid = np.asarray(devs[:n], dtype=object).reshape(shape)
+    return jax.sharding.Mesh(grid, axes)

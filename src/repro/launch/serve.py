@@ -1,0 +1,42 @@
+"""Serving launcher: batched generation with a reduced config on CPU."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    from ..configs import get_arch, reduced
+    from ..models import Runtime, build_param_specs, init_params
+    from ..serving import ServingEngine
+    from ..serving.engine import Request
+
+    cfg = reduced(get_arch(args.arch))
+    rt = Runtime(remat="none", attn_chunk=64)
+    params = init_params(build_param_specs(cfg, rt), jax.random.PRNGKey(args.seed))
+    engine = ServingEngine(params, cfg, rt, batch_size=min(args.requests, 4), max_len=128)
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        Request(prompt=rng.integers(2, cfg.vocab, args.prompt_len).astype(np.int32),
+                max_new_tokens=args.max_new)
+        for _ in range(args.requests)
+    ]
+    engine.generate(reqs)
+    for i, r in enumerate(reqs):
+        print(f"req {i}: generated {len(r.generated)} tokens: {r.generated[:12]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from .runtime import Runtime
+from .params import ParamSpec, abstract_params, init_params, spec_shardings, param_bytes
+from .model import (
+    build_param_specs,
+    forward,
+    decode_step,
+    init_cache,
+    abstract_cache,
+    loss_fn,
+)
+
+__all__ = [
+    "Runtime", "ParamSpec", "abstract_params", "init_params", "spec_shardings",
+    "param_bytes", "build_param_specs", "forward", "decode_step", "init_cache",
+    "abstract_cache", "loss_fn",
+]

@@ -1,0 +1,411 @@
+"""Attention: GQA (causal / bidirectional / sliding-window), MLA, decode.
+
+The training/prefill path is a pure-JAX *flash-style* double-blocked
+attention (lax.scan over query blocks, inner scan over KV chunks with
+running logsumexp) so that S x S score matrices are never materialized —
+required for the 32k prefill cells and the memory roofline, and the
+direct XLA analogue of the Pallas flash kernel (kernels/flash_attn).
+
+GQA is computed in grouped layout (B, S, Hkv, G, D) so repeated KV heads
+are never materialized.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, MLAConfig
+from .blocks import apply_rope
+from .params import ParamSpec
+from .runtime import Runtime
+
+__all__ = [
+    "attention_specs", "attention_apply", "attention_decode_apply",
+    "mla_specs", "mla_apply", "mla_decode_apply", "flash_attention_xla",
+]
+
+NEG_INF = -1e30
+
+
+def _blk_mask(qpos: jax.Array, kpos: jax.Array, causal: bool, window: Optional[int]) -> jax.Array:
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    return mask
+
+
+def _blk_bias(qpos: jax.Array, kpos: jax.Array, causal: bool, window: Optional[int], dt) -> jax.Array:
+    """Additive (qc, kc) mask bias. Kept 2-D so XLA hoists at most a tiny
+    per-block-pair stack instead of materializing broadcast boolean masks
+    at the full (B, qc, H, G, kc) score shape (an observed 8+ GB/device
+    pitfall with ``where``-style masking inside nested scans)."""
+    return jnp.where(_blk_mask(qpos, kpos, causal, window), 0.0, NEG_INF).astype(dt)
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, sm_dt):
+    """Returns (out, lse). Shapes: q (B,Sq,Hkv,G,Dqk), k/v (B,Sk,Hkv,D*)."""
+    B, Sq, Hkv, G, Dqk = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    scale = 1.0 / (Dqk ** 0.5)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qb = q.reshape(B, nq, q_chunk, Hkv, G, Dqk).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, kv_chunk, Hkv, Dqk).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_chunk, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    qpb = jnp.arange(q_chunk)
+    kpb = jnp.arange(kv_chunk)
+
+    def q_block(_, qi_qblk):
+        qi, qblk = qi_qblk
+
+        def kv_step(acc, ki_kv):
+            ki, kblk, vblk = ki_kv
+            m, l, o = acc
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk).astype(sm_dt) * scale
+            bias = _blk_bias(q_offset + qi * q_chunk + qpb, ki * kv_chunk + kpb, causal, window, sm_dt)
+            s = s + bias[None, :, None, None, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(vblk.dtype), vblk
+            ).astype(sm_dt)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, q_chunk, Hkv, G), NEG_INF, sm_dt)
+        l0 = jnp.zeros((B, q_chunk, Hkv, G), sm_dt)
+        o0 = jnp.zeros((B, q_chunk, Hkv, G, Dv), sm_dt)
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), (jnp.arange(nk), kb, vb))
+        out = (o / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, G, Dv)
+    lse = lses.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hkv, G)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, o, lse, do, causal, window, q_offset, q_chunk, kv_chunk, sm_dt):
+    """FlashAttention-2 backward: recompute p per block from lse; two block
+    sweeps (dq over q-blocks; dk/dv over kv-blocks). O(block) live memory."""
+    B, Sq, Hkv, G, Dqk = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    scale = 1.0 / (Dqk ** 0.5)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qb = q.reshape(B, nq, q_chunk, Hkv, G, Dqk).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, kv_chunk, Hkv, Dqk).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_chunk, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    dob = do.reshape(B, nq, q_chunk, Hkv, G, Dv).transpose(1, 0, 2, 3, 4, 5)
+    lseb = lse.reshape(B, nq, q_chunk, Hkv, G).transpose(1, 0, 2, 3, 4)
+    # D_i = rowsum(do * o)
+    Dfull = jnp.sum(do.astype(sm_dt) * o.astype(sm_dt), axis=-1)
+    Db = Dfull.reshape(B, nq, q_chunk, Hkv, G).transpose(1, 0, 2, 3, 4)
+    qpb = jnp.arange(q_chunk)
+    kpb = jnp.arange(kv_chunk)
+
+    def p_block(qblk, kblk, lse_i, qi, ki):
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk).astype(sm_dt) * scale
+        bias = _blk_bias(q_offset + qi * q_chunk + qpb, ki * kv_chunk + kpb, causal, window, sm_dt)
+        return jnp.exp(s + bias[None, :, None, None, :] - lse_i[..., None])
+
+    # ---- pass 1: dq, scanning kv blocks inside each q block
+    def dq_block(_, inp):
+        qi, qblk, do_i, lse_i, D_i = inp
+
+        def kv_step(dq_acc, ki_kv):
+            ki, kblk, vblk = ki_kv
+            p = p_block(qblk, kblk, lse_i, qi, ki)
+            dp = jnp.einsum("bqhgd,bkhd->bqhgk", do_i.astype(sm_dt), vblk.astype(sm_dt))
+            ds = p * (dp - D_i[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bqhgk,bkhd->bqhgd", ds, kblk.astype(sm_dt))
+            return dq_acc, None
+
+        dq0 = jnp.zeros((B, q_chunk, Hkv, G, Dqk), sm_dt)
+        dq_i, _ = jax.lax.scan(kv_step, dq0, (jnp.arange(nk), kb, vb))
+        return None, dq_i.astype(q.dtype)
+
+    _, dqs = jax.lax.scan(dq_block, None, (jnp.arange(nq), qb, dob, lseb, Db))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, G, Dqk)
+
+    # ---- pass 2: dk/dv, scanning q blocks inside each kv block
+    def dkv_block(_, inp):
+        ki, kblk, vblk = inp
+
+        def q_step(acc, qinp):
+            qi, qblk, do_i, lse_i, D_i = qinp
+            dk_acc, dv_acc = acc
+            p = p_block(qblk, kblk, lse_i, qi, ki)
+            dv_acc = dv_acc + jnp.einsum("bqhgk,bqhgd->bkhd", p, do_i.astype(sm_dt))
+            dp = jnp.einsum("bqhgd,bkhd->bqhgk", do_i.astype(sm_dt), vblk.astype(sm_dt))
+            ds = p * (dp - D_i[..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum("bqhgk,bqhgd->bkhd", ds, qblk.astype(sm_dt))
+            return (dk_acc, dv_acc), None
+
+        dk0 = jnp.zeros((B, kv_chunk, Hkv, Dqk), sm_dt)
+        dv0 = jnp.zeros((B, kv_chunk, Hkv, Dv), sm_dt)
+        (dk_i, dv_i), _ = jax.lax.scan(q_step, (dk0, dv0), (jnp.arange(nq), qb, dob, lseb, Db))
+        return None, (dk_i.astype(k.dtype), dv_i.astype(v.dtype))
+
+    _, (dks, dvs) = jax.lax.scan(dkv_block, None, (jnp.arange(nk), kb, vb))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, Hkv, Dqk)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, Hkv, Dv)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_core(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, sm_name):
+    out, _ = _flash_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, jnp.dtype(sm_name))
+    return out
+
+
+def _flash_core_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, sm_name):
+    out, lse = _flash_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, jnp.dtype(sm_name))
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, window, q_offset, q_chunk, kv_chunk, sm_name, res, do):
+    q, k, v, out, lse = res
+    dq, dk, dv = _flash_bwd_impl(
+        q, k, v, out, lse, do, causal, window, q_offset, q_chunk, kv_chunk, jnp.dtype(sm_name)
+    )
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention_xla(
+    q: jax.Array,           # (B, Sq, Hkv, G, Dqk)
+    k: jax.Array,           # (B, Sk, Hkv, Dqk)
+    v: jax.Array,           # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,       # absolute position of q[0] (prefill continuation)
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    softmax_dtype=jnp.float32,
+) -> jax.Array:
+    """Memory-efficient attention (custom VJP; backward recomputes the
+    probability blocks from lse — FlashAttention-2 semantics in XLA).
+    Returns (B, Sq, Hkv, G, Dv)."""
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    while Sq % q_chunk:
+        q_chunk //= 2
+    while Sk % kv_chunk:
+        kv_chunk //= 2
+    return _flash_core(q, k, v, causal, window, q_offset, q_chunk, kv_chunk,
+                       jnp.dtype(softmax_dtype).name)
+
+
+# ------------------------------------------------------------------ GQA block
+
+
+def attention_specs(cfg: ArchConfig, stacked: Optional[int] = None, dtype=jnp.bfloat16,
+                    cross: bool = False) -> Dict[str, ParamSpec]:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    return {
+        "wq": ParamSpec(lead + (d, hq, hd), lax_ + ("embed", "heads", "qk"), dtype, "scaled", fan_in_axis=-3),
+        "wk": ParamSpec(lead + (d, hkv, hd), lax_ + ("embed", "kv_heads", "qk"), dtype, "scaled", fan_in_axis=-3),
+        "wv": ParamSpec(lead + (d, hkv, hd), lax_ + ("embed", "kv_heads", "qk"), dtype, "scaled", fan_in_axis=-3),
+        "wo": ParamSpec(lead + (hq, hd, d), lax_ + ("heads", "qk", "embed"), dtype, "scaled", fan_in_axis=-2),
+    }
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions, rt: Runtime, kv_x=None, rope=True):
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", src, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", src, p["wv"])
+    if rope and cfg.rope != "none":
+        sections = (16, 24, 24) if cfg.rope == "mrope" else None
+        if cfg.rope == "mrope":
+            q = apply_rope(q, positions, mrope_sections=sections)
+            k = apply_rope(k, positions, mrope_sections=sections)
+        else:
+            q = apply_rope(q, positions)
+            k = apply_rope(k, positions)
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, hkv, g, cfg.head_dim)
+    return q, k, v
+
+
+def attention_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg: ArchConfig,
+    rt: Runtime,
+    positions: jax.Array,
+    causal: bool = True,
+    kv_x: Optional[jax.Array] = None,   # cross-attention source
+) -> jax.Array:
+    use_rope = kv_x is None and cfg.rope != "none"
+    if kv_x is None:
+        kv_positions = positions
+    q, k, v = _project_qkv(p, x, cfg, positions, rt, kv_x=kv_x, rope=use_rope)
+    if rt.attn_impl == "flash":
+        from ..kernels.flash_attn import ops as flash_ops
+
+        o = flash_ops.flash_attention(
+            q, k, v, causal=causal and kv_x is None, window=cfg.window,
+            q_block=rt.q_block, kv_block=rt.kv_block,
+        )
+    else:
+        o = flash_attention_xla(
+            q, k, v,
+            causal=causal and kv_x is None,
+            window=cfg.window,
+            q_chunk=rt.attn_chunk, kv_chunk=rt.attn_chunk,
+            softmax_dtype=jnp.dtype(rt.softmax_dtype),
+        )
+    B, S = x.shape[:2]
+    o = o.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+def attention_decode_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                     # (B, 1, D)
+    cache: Dict[str, jax.Array],      # {"k": (B, S, Hkv, hd), "v": ..., "pos": (B,)}
+    cfg: ArchConfig,
+    rt: Runtime,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+    pos = cache["pos"]                # (B,) current length
+    S = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.rope != "none":
+        posb = pos[:, None]
+        if cfg.rope == "mrope":
+            pos3 = jnp.broadcast_to(posb[..., None], (B, 1, 3))
+            q = apply_rope(q, pos3, mrope_sections=(16, 24, 24))
+            k = apply_rope(k, pos3, mrope_sections=(16, 24, 24))
+        else:
+            q = apply_rope(q, posb)
+            k = apply_rope(k, posb)
+    # ring-buffer write (sliding window) or linear write
+    if cfg.window is not None and S == cfg.window:
+        slot = pos % S
+    else:
+        slot = jnp.minimum(pos, S - 1)
+    bidx = jnp.arange(B)
+    knew = cache["k"].at[bidx, slot].set(k[:, 0])
+    vnew = cache["v"].at[bidx, slot].set(v[:, 0])
+    # attend: q (B,hkv,g,hd) over knew (B,S,hkv,hd)
+    qg = q.reshape(B, hkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, knew)
+    s = (s.astype(jnp.float32)) / (hd ** 0.5)
+    kpos = jnp.arange(S)[None, :]                          # (1, S)
+    if cfg.window is not None and S == cfg.window:
+        valid = kpos < jnp.minimum(pos + 1, S)[:, None]    # ring: all written slots valid
+    else:
+        valid = kpos <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(vnew.dtype)
+    o = jnp.einsum("bhgk,bkhd->bhgd", a, vnew).reshape(B, 1, hq, hd)
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return out, {"k": knew, "v": vnew, "pos": pos + 1}
+
+
+# ----------------------------------------------------------------------- MLA
+
+
+def mla_specs(cfg: ArchConfig, stacked: Optional[int] = None, dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    return {
+        "w_dq": ParamSpec(lead + (d, m.q_lora_rank), lx + ("embed", "rank"), dtype, "scaled"),
+        "q_norm": ParamSpec(lead + (m.q_lora_rank,), lx + ("rank",), dtype, "ones"),
+        "w_uq": ParamSpec(lead + (m.q_lora_rank, h, m.qk_nope_head_dim + m.qk_rope_head_dim),
+                          lx + ("rank", "heads", "qk"), dtype, "scaled", fan_in_axis=-3),
+        "w_dkv": ParamSpec(lead + (d, m.kv_lora_rank + m.qk_rope_head_dim), lx + ("embed", "rank"), dtype, "scaled"),
+        "kv_norm": ParamSpec(lead + (m.kv_lora_rank,), lx + ("rank",), dtype, "ones"),
+        "w_uk": ParamSpec(lead + (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                          lx + ("rank", "heads", "qk"), dtype, "scaled", fan_in_axis=-3),
+        "w_uv": ParamSpec(lead + (m.kv_lora_rank, h, m.v_head_dim),
+                          lx + ("rank", "heads", "qk"), dtype, "scaled", fan_in_axis=-3),
+        "wo": ParamSpec(lead + (h, m.v_head_dim, d), lx + ("heads", "qk", "embed"), dtype, "scaled", fan_in_axis=-2),
+    }
+
+
+def _mla_qkv(p, x, cfg: ArchConfig, positions):
+    from .blocks import rmsnorm
+
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(x @ p["w_dq"], p["q_norm"])                       # (B,S,rq)
+    q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])                 # (B,S,H,nope+rope)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions)
+    ckv_full = x @ p["w_dkv"]                                      # (B,S,rkv+rope)
+    c_kv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions)          # (B,S,1,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(p, x, cfg: ArchConfig, rt: Runtime, positions, causal: bool = True) -> jax.Array:
+    """Prefill/train MLA: materialize per-head K/V from the latent."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)                 # (B,S,H,192)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, h, m.qk_rope_head_dim))], axis=-1)
+    qg = q.reshape(B, S, h, 1, q.shape[-1])                        # Hkv = H (kv=128)
+    o = flash_attention_xla(
+        qg, k, v, causal=causal, q_chunk=rt.attn_chunk, kv_chunk=rt.attn_chunk,
+        softmax_dtype=jnp.dtype(rt.softmax_dtype),
+    ).reshape(B, S, h, m.v_head_dim)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+def mla_decode_apply(p, x, cache, cfg: ArchConfig, rt: Runtime):
+    """Absorbed-matmul MLA decode: attention runs in the 512-d latent space;
+    the cache holds only (c_kv, k_rope) — the MLA memory win."""
+    m = cfg.mla
+    B = x.shape[0]
+    h = cfg.n_heads
+    pos = cache["pos"]
+    S = cache["c_kv"].shape[1]
+    posb = pos[:, None]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, x, cfg, posb)
+    bidx = jnp.arange(B)
+    slot = jnp.minimum(pos, S - 1)
+    ckv = cache["c_kv"].at[bidx, slot].set(c_kv_new[:, 0])
+    krope = cache["k_rope"].at[bidx, slot].set(k_rope_new[:, 0, 0])
+    # absorb W_uk into q: q_lat (B,1,H,rkv)
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"])
+    s = jnp.einsum("bhr,bkr->bhk", q_lat[:, 0], ckv)
+    s = s + jnp.einsum("bhe,bke->bhk", q_rope[:, 0], krope)
+    s = s.astype(jnp.float32) / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(ckv.dtype)
+    ctx = jnp.einsum("bhk,bkr->bhr", a, ckv)                       # latent context
+    o = jnp.einsum("bhr,rhe->bhe", ctx, p["w_uv"])                 # (B,H,v_dim)
+    out = jnp.einsum("bhe,hed->bd", o, p["wo"])[:, None, :]
+    return out, {"c_kv": ckv, "k_rope": krope, "pos": pos + 1}

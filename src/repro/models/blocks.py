@@ -1,0 +1,134 @@
+"""Shared building blocks: norms, FFN variants, rotary embeddings."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .params import ParamSpec
+from .runtime import Runtime
+
+__all__ = [
+    "rmsnorm", "ffn_specs", "ffn_apply", "rope_freqs", "apply_rope",
+    "mrope_positions", "with_named_precision",
+]
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 * rms) * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------- FFN
+
+
+def ffn_specs(d_model: int, d_ff: int, act: str, stacked: Optional[int] = None,
+              dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
+    lead = (stacked,) if stacked else ()
+    lax = ("layers",) if stacked else ()
+    if act == "swiglu":
+        return {
+            "w_gate": ParamSpec(lead + (d_model, d_ff), lax + ("embed", "mlp"), dtype, "scaled"),
+            "w_up": ParamSpec(lead + (d_model, d_ff), lax + ("embed", "mlp"), dtype, "scaled"),
+            "w_down": ParamSpec(lead + (d_ff, d_model), lax + ("mlp", "embed"), dtype, "scaled"),
+        }
+    # two-matrix FFNs: squared-ReLU (Primer / Nemotron-4) or GELU (StarCoder2)
+    return {
+        "w_up": ParamSpec(lead + (d_model, d_ff), lax + ("embed", "mlp"), dtype, "scaled"),
+        "w_down": ParamSpec(lead + (d_ff, d_model), lax + ("mlp", "embed"), dtype, "scaled"),
+    }
+
+
+def ffn_apply(p: Dict[str, jax.Array], x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"])
+    else:
+        r = jax.nn.relu(x @ p["w_up"])
+        h = r * r
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               mrope_sections: Optional[Tuple[int, ...]] = None) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)
+    or (..., seq, 3) for M-RoPE (t/h/w position ids, arXiv:2409.12191)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    else:
+        # split the rotary dims into (t, h, w) sections, each section driven
+        # by its own position id stream
+        secs = []
+        start = 0
+        for i, n in enumerate(mrope_sections):
+            f = freqs[start:start + n]
+            secs.append(positions[..., i][..., None].astype(jnp.float32) * f)
+            start += n
+        ang = jnp.concatenate(secs, axis=-1)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_positions(batch: int, seq: int) -> jax.Array:
+    """Stub 3D positions for the VLM backbone: text-linear in all sections.
+    The vision frontend would supply true (t, h, w) ids per patch."""
+    p = jnp.arange(seq, dtype=jnp.int32)
+    return jnp.broadcast_to(p[None, :, None], (batch, seq, 3))
+
+
+def with_named_precision(rt: Runtime):
+    prec = {"default": None, "high": jax.lax.Precision.HIGH, "highest": jax.lax.Precision.HIGHEST}
+    return prec[rt.matmul_precision]
+
+
+def shard_batch(x: jax.Array, rt: Runtime, seq_dim: int = 1) -> jax.Array:
+    """Constrain an activation to batch-DP (+ optional sequence-parallel)
+    layout. Without this constraint GSPMD has been observed to propagate a
+    d_model-sharded / batch-REPLICATED layout from the FSDP-sharded
+    embedding into the whole residual stream (a 16x activation-memory
+    regression at dp=16). No-op outside a mesh context (smoke tests)."""
+    if not rt.act_shard:
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        axes = tuple(a for a in ("pod", "data") if a in sizes)
+        if not axes:
+            return x
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        spec: list = [None] * x.ndim
+        if x.shape[0] % total == 0 and x.shape[0] >= total:
+            spec[0] = axes if len(axes) > 1 else axes[0]
+        if (
+            rt.seq_shard and "model" in sizes and x.ndim >= 3
+            and x.shape[seq_dim] % sizes["model"] == 0
+        ):
+            spec[seq_dim] = "model"
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

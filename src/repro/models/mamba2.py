@@ -1,0 +1,171 @@
+"""Mamba2 (SSD) block — chunked state-space dual form (arXiv:2405.21060).
+
+Training/prefill uses the SSD chunked algorithm: within a chunk the output
+is computed in quadratic attention-like form with decay masks; states are
+passed across chunks with a lax.scan (the TPU-friendly parallel form —
+chunk matmuls hit the MXU, the scan carries only the (H, P, N) state).
+Decode is the O(1) recurrent update on a cached state.
+
+Layout: d_inner = expand * d_model, heads H = d_inner / head_dim(P),
+state N = d_state. Scalar-identity A (Mamba2 simplification): per-head
+decay a_t = exp(-softplus(A) * dt_t).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .params import ParamSpec
+from .runtime import Runtime
+
+__all__ = ["mamba2_specs", "mamba2_apply", "mamba2_decode_apply", "mamba2_init_state"]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.d_state
+
+
+def mamba2_specs(cfg: ArchConfig, stacked: Optional[int] = None, dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di, H, P, N = _dims(cfg)
+    conv = cfg.ssm.conv_dim
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    specs = {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": ParamSpec(lead + (d, 2 * di + 2 * H * N + H), lx + ("embed", "ssm_inner"), dtype, "scaled"),
+        "w_out": ParamSpec(lead + (di, d), lx + ("ssm_inner", "embed"), dtype, "scaled"),
+        "A_log": ParamSpec(lead + (H,), lx + (None,), jnp.float32, "zeros"),
+        "D": ParamSpec(lead + (H,), lx + (None,), jnp.float32, "zeros"),
+        "dt_bias": ParamSpec(lead + (H,), lx + (None,), jnp.float32, "zeros"),
+        "norm": ParamSpec(lead + (di,), lx + ("ssm_inner",), dtype, "ones"),
+    }
+    if conv:
+        specs["w_conv"] = ParamSpec(
+            lead + (conv, di + 2 * H * N), lx + (None, "ssm_inner"), dtype, "scaled", fan_in_axis=-2
+        )
+    return specs
+
+
+def _split_in(y: jax.Array, cfg: ArchConfig):
+    di, H, P, N = _dims(cfg)
+    z, x, B, C, dt = jnp.split(y, [di, 2 * di, 2 * di + H * N, 2 * di + 2 * H * N], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(xbc: jax.Array, w_conv: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. xbc: (B, S, F), w_conv: (K, F)."""
+    K = w_conv.shape[0]
+    pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[-1]), xbc.dtype) if state is None else state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1], :] * w_conv[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xh, Bh, Ch, a, chunk: int):
+    """SSD scan. xh: (B,S,H,P), Bh/Ch: (B,S,H,N), a: (B,S,H) log-decay (<=0).
+    Returns (B,S,H,P)."""
+    Bsz, S, H, P = xh.shape
+    N = Bh.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    xc = xh.reshape(Bsz, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    Bc = Bh.reshape(Bsz, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    Cc = Ch.reshape(Bsz, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    ac = a.reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3)
+
+    def chunk_step(state, inp):
+        xk, Bk, Ck, ak = inp                     # (B,c,H,P/N), (B,c,H)
+        cs = jnp.cumsum(ak, axis=1)              # (B,c,H) cumulative log decay
+        total = cs[:, -1:, :]                    # (B,1,H)
+        # intra-chunk (quadratic attention-like with decay mask)
+        rel = cs[:, :, None, :] - cs[:, None, :, :]        # (B, q, k, H)
+        causal = jnp.tril(jnp.ones((xk.shape[1], xk.shape[1]), bool))
+        L = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        s = jnp.einsum("bqhn,bkhn->bqkh", Ck, Bk) * L
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", s.astype(xk.dtype), xk)
+        # contribution of the carried state
+        decay_q = jnp.exp(cs)                    # (B,c,H)
+        y_state = jnp.einsum("bqhn,bhpn->bqhp", Ck * decay_q[..., None], state).astype(xk.dtype)
+        # state update: state' = exp(total) * state + sum_k exp(total - cs_k) B_k x_k
+        w = jnp.exp(total - cs)                  # (B,c,H)
+        state_new = jnp.exp(total)[:, 0, :, None, None] * state + jnp.einsum(
+            "bkhn,bkhp->bhpn", (Bk * w[..., None]).astype(jnp.float32), xk.astype(jnp.float32)
+        )
+        return state_new, y_intra + y_state
+
+    state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, state0, (xc, Bc, Cc, ac))
+    return ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+
+
+def mamba2_apply(p: Dict[str, jax.Array], u: jax.Array, cfg: ArchConfig, rt: Runtime) -> jax.Array:
+    """u: (B, S, D) -> (B, S, D)."""
+    from .blocks import rmsnorm
+
+    di, H, P, N = _dims(cfg)
+    B_, S, _ = u.shape
+    y = u @ p["w_in"]
+    z, x, Bv, Cv, dt = _split_in(y, cfg)
+    if cfg.ssm.conv_dim:
+        xbc = jnp.concatenate([x, Bv, Cv], axis=-1)
+        xbc, _ = _causal_conv(xbc, p["w_conv"])
+        x, Bv, Cv = jnp.split(xbc, [di, di + H * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])            # (B,S,H)
+    a = -jnp.exp(p["A_log"]) * dt                                          # log decay <= 0
+    xh = (x * dt.repeat(P, axis=-1)).astype(u.dtype).reshape(B_, S, H, P)
+    Bh = Bv.reshape(B_, S, H, N)
+    Ch = Cv.reshape(B_, S, H, N)
+    yh = _ssd_chunked(xh, Bh, Ch, a, cfg.ssm.chunk)
+    yh = yh + x.reshape(B_, S, H, P) * p["D"][None, None, :, None].astype(u.dtype)
+    out = yh.reshape(B_, S, di)
+    out = rmsnorm(out, p["norm"]) * jax.nn.silu(z)
+    return out @ p["w_out"]
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, H, P, N = _dims(cfg)
+    st = {"ssm": jnp.zeros((batch, H, P, N), jnp.float32)}
+    if cfg.ssm.conv_dim:
+        st["conv"] = jnp.zeros((batch, cfg.ssm.conv_dim - 1, di + 2 * H * N), dtype)
+    return st
+
+
+def mamba2_decode_apply(p, u, state, cfg: ArchConfig, rt: Runtime):
+    """Single-token recurrent update. u: (B, 1, D)."""
+    from .blocks import rmsnorm
+
+    di, H, P, N = _dims(cfg)
+    B_ = u.shape[0]
+    y = u @ p["w_in"]
+    z, x, Bv, Cv, dt = _split_in(y, cfg)
+    new_state = dict(state)
+    if cfg.ssm.conv_dim:
+        xbc = jnp.concatenate([x, Bv, Cv], axis=-1)
+        xbc, conv_state = _causal_conv(xbc, p["w_conv"], state["conv"])
+        new_state["conv"] = conv_state
+        x, Bv, Cv = jnp.split(xbc, [di, di + H * N], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])      # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                                 # (B,H)
+    xh = (x[:, 0] * dt.repeat(P, axis=-1)).reshape(B_, H, P)
+    Bh = Bv[:, 0].reshape(B_, H, N)
+    Ch = Cv[:, 0].reshape(B_, H, N)
+    s = state["ssm"] * a[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", Bh.astype(jnp.float32), xh.astype(jnp.float32)
+    )
+    new_state["ssm"] = s
+    yh = jnp.einsum("bhpn,bhn->bhp", s, Ch.astype(jnp.float32)).astype(u.dtype)
+    yh = yh + x[:, 0].reshape(B_, H, P) * p["D"][None, :, None].astype(u.dtype)
+    out = yh.reshape(B_, 1, di)
+    out = rmsnorm(out, p["norm"]) * jax.nn.silu(z)
+    return out @ p["w_out"], new_state

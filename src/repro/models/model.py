@@ -1,0 +1,578 @@
+"""Model assembly: param specs, forward, decode, loss for all 10 archs.
+
+Layer stacks are *stacked* (leading "layers" axis) and driven by lax.scan
+(compile-time and HLO-size control at 96 layers); remat policy wraps the
+scanned body. The hybrid (zamba2) interleaves scanned Mamba2 groups with a
+parameter-shared attention block; the enc-dec runs an encoder stack then a
+decoder stack with cross-attention.
+
+Decode paths operate on a cache pytree (stacked over layers, scanned) —
+KV for attention archs, compressed latents for MLA, O(1) states for
+SSM/RWKV, ring buffers for sliding-window.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import (
+    attention_apply,
+    attention_decode_apply,
+    attention_specs,
+    mla_apply,
+    mla_decode_apply,
+    mla_specs,
+)
+from .blocks import ffn_apply, ffn_specs, mrope_positions, rmsnorm, shard_batch
+from .mamba2 import (
+    mamba2_apply,
+    mamba2_decode_apply,
+    mamba2_init_state,
+    mamba2_specs,
+)
+from .moe import moe_apply, moe_specs
+from .params import ParamSpec, abstract_params, init_params
+from .runtime import Runtime
+from .rwkv6 import rwkv6_apply, rwkv6_decode_apply, rwkv6_init_state, rwkv6_specs
+
+__all__ = [
+    "build_param_specs", "forward", "decode_step", "init_cache",
+    "abstract_cache", "loss_fn",
+]
+
+
+def _ln(stacked: Optional[int], d: int, dtype=jnp.bfloat16) -> ParamSpec:
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    return ParamSpec(lead + (d,), lx + ("embed",), dtype, "ones")
+
+
+def _remat(fn, rt: Runtime):
+    if rt.remat == "none":
+        return fn
+    if rt.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full"
+
+
+# =========================================================== param specs
+
+
+def build_param_specs(cfg: ArchConfig, rt: Optional[Runtime] = None):
+    rt = rt or Runtime()
+    dt = rt.pdtype
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((V, d), ("vocab", "embed"), dt, "normal"),
+        "final_ln": _ln(None, d, dt),
+    }
+    if not cfg.tie_embeddings:
+        specs["out"] = ParamSpec((V, d), ("vocab", "embed"), dt, "scaled", fan_in_axis=-1)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        specs["blocks"] = {
+            "attn": attention_specs(cfg, stacked=L, dtype=dt),
+            "ffn": ffn_specs(d, cfg.d_ff, cfg.act, stacked=L, dtype=dt),
+            "ln1": _ln(L, d, dt),
+            "ln2": _ln(L, d, dt),
+        }
+    elif fam == "moe":
+        nd = cfg.moe.first_dense_layers
+        nm = L - nd
+        attn_fn = mla_specs if cfg.mla is not None else attention_specs
+        if nd:
+            specs["dense_blocks"] = {
+                "attn": attn_fn(cfg, stacked=nd, dtype=dt),
+                "ffn": ffn_specs(d, cfg.d_ff, cfg.act, stacked=nd, dtype=dt),
+                "ln1": _ln(nd, d, dt),
+                "ln2": _ln(nd, d, dt),
+            }
+        specs["blocks"] = {
+            "attn": attn_fn(cfg, stacked=nm, dtype=dt),
+            "moe": moe_specs(cfg, stacked=nm, dtype=dt),
+            "ln1": _ln(nm, d, dt),
+            "ln2": _ln(nm, d, dt),
+        }
+        if cfg.mtp_depth:
+            specs["mtp"] = {
+                "proj": ParamSpec((2 * d, d), ("embed", "embed"), dt, "scaled"),
+                "attn": attn_fn(cfg, stacked=None, dtype=dt),
+                "ffn": ffn_specs(d, cfg.moe.d_ff_expert, cfg.act, stacked=None, dtype=dt),
+                "ln1": _ln(None, d, dt),
+                "ln2": _ln(None, d, dt),
+                "ln_h": _ln(None, d, dt),
+                "ln_e": _ln(None, d, dt),
+            }
+    elif fam == "ssm":  # rwkv6
+        specs["blocks"] = {
+            "tmix": rwkv6_specs(cfg, stacked=L, dtype=dt),
+            "cmix": {
+                "w_k": ParamSpec((L, d, cfg.d_ff), ("layers", "embed", "mlp"), dt, "scaled"),
+                "w_v": ParamSpec((L, cfg.d_ff, d), ("layers", "mlp", "embed"), dt, "scaled"),
+                "w_r": ParamSpec((L, d, d), ("layers", "embed", "heads"), dt, "scaled"),
+                "mix": ParamSpec((L, 2, d), ("layers", None, "embed"), dt, "zeros"),
+            },
+            "ln1": _ln(L, d, dt),
+            "ln2": _ln(L, d, dt),
+        }
+    elif fam == "hybrid":  # zamba2
+        specs["blocks"] = {
+            "mamba": mamba2_specs(cfg, stacked=L, dtype=dt),
+            "ln": _ln(L, d, dt),
+        }
+        specs["shared_attn"] = {
+            "attn": attention_specs(cfg, stacked=None, dtype=dt),
+            "ffn": ffn_specs(d, cfg.d_ff, cfg.act, stacked=None, dtype=dt),
+            "ln1": _ln(None, d, dt),
+            "ln2": _ln(None, d, dt),
+        }
+    elif fam == "encdec":
+        Le = cfg.n_encoder_layers
+        specs["enc_blocks"] = {
+            "attn": attention_specs(cfg, stacked=Le, dtype=dt),
+            "ffn": ffn_specs(d, cfg.d_ff, cfg.act, stacked=Le, dtype=dt),
+            "ln1": _ln(Le, d, dt),
+            "ln2": _ln(Le, d, dt),
+        }
+        specs["blocks"] = {
+            "attn": attention_specs(cfg, stacked=L, dtype=dt),
+            "xattn": attention_specs(cfg, stacked=L, dtype=dt, cross=True),
+            "ffn": ffn_specs(d, cfg.d_ff, cfg.act, stacked=L, dtype=dt),
+            "ln1": _ln(L, d, dt),
+            "ln2": _ln(L, d, dt),
+            "ln3": _ln(L, d, dt),
+        }
+        specs["enc_ln"] = _ln(None, d, dt)
+    else:
+        raise ValueError(fam)
+    return specs
+
+
+# =============================================================== forward
+
+
+def _rwkv_cmix(p, x, prev=None):
+    from .rwkv6 import _token_shift
+
+    shifted = _token_shift(x, prev)
+    lam_k = jax.nn.sigmoid(p["mix"][0]).astype(x.dtype)
+    lam_r = jax.nn.sigmoid(p["mix"][1]).astype(x.dtype)
+    xk = x + (shifted - x) * lam_k
+    xr = x + (shifted - x) * lam_r
+    k = jax.nn.relu(xk @ p["w_k"])
+    return jax.nn.sigmoid(xr @ p["w_r"]) * ((k * k) @ p["w_v"])
+
+
+def _scan_stack(fn, x, stacked_params, rt: Runtime):
+    def constrained(h, p):
+        return shard_batch(fn(shard_batch(h, rt), p), rt)
+
+    body = _remat(constrained, rt)
+    if rt.scan_layers:
+        x, _ = jax.lax.scan(lambda h, p: (body(h, p), None), x, stacked_params,
+                            unroll=rt.scan_unroll)
+        return x
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    for i in range(n):
+        x = body(x, jax.tree.map(lambda a: a[i], stacked_params))
+    return x
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    rt: Runtime,
+    tokens: Optional[jax.Array] = None,       # (B, S) int32
+    inputs_embeds: Optional[jax.Array] = None, # (B, S, D) modality stub
+    positions: Optional[jax.Array] = None,
+    enc_embeds: Optional[jax.Array] = None,    # enc-dec encoder input
+    causal: bool = True,
+    return_hidden: bool = False,
+) -> jax.Array:
+    """Returns logits (B, S, V). For enc-dec, ``tokens`` are decoder tokens."""
+    if inputs_embeds is not None:
+        x = inputs_embeds.astype(rt.cdtype)
+        B, S = x.shape[:2]
+    else:
+        x = params["embed"][tokens].astype(rt.cdtype)
+        B, S = tokens.shape
+    x = shard_batch(x, rt)
+    if positions is None:
+        if cfg.rope == "mrope":
+            positions = mrope_positions(B, S)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        def blk(h, p):
+            h = h + attention_apply(p["attn"], rmsnorm(h, p["ln1"], cfg.norm_eps), cfg, rt, positions, causal)
+            h = h + ffn_apply(p["ffn"], rmsnorm(h, p["ln2"], cfg.norm_eps), cfg.act)
+            return h
+        x = _scan_stack(blk, x, params["blocks"], rt)
+
+    elif fam == "moe":
+        attn = mla_apply if cfg.mla is not None else attention_apply
+        if "dense_blocks" in params:
+            def dblk(h, p):
+                h = h + attn(p["attn"], rmsnorm(h, p["ln1"], cfg.norm_eps), cfg, rt, positions, causal)
+                h = h + ffn_apply(p["ffn"], rmsnorm(h, p["ln2"], cfg.norm_eps), cfg.act)
+                return h
+            x = _scan_stack(dblk, x, params["dense_blocks"], rt)
+
+        def mblk(h, p):
+            h = h + attn(p["attn"], rmsnorm(h, p["ln1"], cfg.norm_eps), cfg, rt, positions, causal)
+            h = h + moe_apply(p["moe"], rmsnorm(h, p["ln2"], cfg.norm_eps), cfg, rt)
+            return h
+        x = _scan_stack(mblk, x, params["blocks"], rt)
+
+    elif fam == "ssm":
+        def blk(h, p):
+            h = h + rwkv6_apply(p["tmix"], rmsnorm(h, p["ln1"], cfg.norm_eps), cfg, rt)
+            h = h + _rwkv_cmix(p["cmix"], rmsnorm(h, p["ln2"], cfg.norm_eps))
+            return h
+        x = _scan_stack(blk, x, params["blocks"], rt)
+
+    elif fam == "hybrid":
+        every = cfg.attn_every or cfg.n_layers
+        groups = cfg.n_layers // every
+        gp = jax.tree.map(
+            lambda a: a.reshape((groups, every) + a.shape[1:]), params["blocks"]
+        )
+        sa = params["shared_attn"]
+
+        def mblk(h, p):
+            return h + mamba2_apply(p["mamba"], rmsnorm(h, p["ln"], cfg.norm_eps), cfg, rt)
+
+        for g in range(groups):
+            x = _scan_stack(mblk, x, jax.tree.map(lambda a: a[g], gp), rt)
+            x = x + attention_apply(sa["attn"], rmsnorm(x, sa["ln1"], cfg.norm_eps), cfg, rt, positions, causal)
+            x = x + ffn_apply(sa["ffn"], rmsnorm(x, sa["ln2"], cfg.norm_eps), cfg.act)
+
+    elif fam == "encdec":
+        assert enc_embeds is not None, "enc-dec needs encoder inputs"
+        e = enc_embeds.astype(rt.cdtype)
+        Be, Se = e.shape[:2]
+        epos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (Be, Se))
+
+        def eblk(h, p):
+            h = h + attention_apply(p["attn"], rmsnorm(h, p["ln1"], cfg.norm_eps), cfg, rt, epos, causal=False)
+            h = h + ffn_apply(p["ffn"], rmsnorm(h, p["ln2"], cfg.norm_eps), cfg.act)
+            return h
+        e = _scan_stack(eblk, e, params["enc_blocks"], rt)
+        e = rmsnorm(e, params["enc_ln"], cfg.norm_eps)
+
+        def dblk(h, p):
+            h = h + attention_apply(p["attn"], rmsnorm(h, p["ln1"], cfg.norm_eps), cfg, rt, positions, causal=True)
+            h = h + attention_apply(p["xattn"], rmsnorm(h, p["ln3"], cfg.norm_eps), cfg, rt, positions, causal=False, kv_x=e)
+            h = h + ffn_apply(p["ffn"], rmsnorm(h, p["ln2"], cfg.norm_eps), cfg.act)
+            return h
+        x = _scan_stack(dblk, x, params["blocks"], rt)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    out_w = params["embed"] if cfg.tie_embeddings else params["out"]
+    return jnp.einsum("bsd,vd->bsv", x, out_w)
+
+
+# ================================================================= loss
+
+
+def chunked_ce(x: jax.Array, out_w: jax.Array, labels: jax.Array,
+               chunk: int = 512) -> jax.Array:
+    """Cross-entropy over the vocab head without materializing (B, S, V).
+
+    Scans over sequence chunks; each chunk's logits live only inside the
+    (rematerialized) chunk body — the head is recomputed in the backward
+    pass. This is the difference between O(S*V) and O(chunk*V) live bytes
+    per device at 128k-vocab scales.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(tot, inp):
+        xk, lk = inp
+        # preferred_element_type keeps the cotangent wrt xk in bf16 — without
+        # it the f32 cast back-propagates f32 carries through the layer scan
+        # (an observed 34 GB/device residual stack).
+        lg = jnp.einsum("bsd,vd->bsv", xk, out_w, preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        onehot = jax.nn.one_hot(lk, lg.shape[-1], dtype=lg.dtype)
+        gold = jnp.sum(lg * onehot, axis=-1)
+        return tot + (lse - gold).sum(), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return tot / (B * S)
+
+
+def loss_fn(params, cfg: ArchConfig, rt: Runtime, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Next-token CE (+ DeepSeek MTP auxiliary loss when configured)."""
+    tokens = batch.get("tokens")
+    labels = batch["labels"]
+    x = forward(
+        params, cfg, rt,
+        tokens=tokens,
+        inputs_embeds=batch.get("inputs_embeds"),
+        positions=batch.get("positions"),
+        enc_embeds=batch.get("enc_embeds"),
+        return_hidden=True,
+    )
+    out_w = params["embed"] if cfg.tie_embeddings else params["out"]
+    loss = chunked_ce(x, out_w, labels)
+    if cfg.mtp_depth and "mtp" in params and tokens is not None:
+        # Multi-token prediction (depth 1): combine hidden-ish signal with the
+        # embedding of the next token, one extra block, predict t+2.
+        m = params["mtp"]
+        h = params["embed"][tokens].astype(rt.cdtype)
+        e_next = params["embed"][jnp.roll(tokens, -1, axis=1)].astype(rt.cdtype)
+        hm = jnp.concatenate([rmsnorm(h, m["ln_h"], cfg.norm_eps), rmsnorm(e_next, m["ln_e"], cfg.norm_eps)], axis=-1) @ m["proj"]
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        attn = mla_apply if cfg.mla is not None else attention_apply
+        hm = hm + attn(m["attn"], rmsnorm(hm, m["ln1"], cfg.norm_eps), cfg, rt, pos, True)
+        hm = hm + ffn_apply(m["ffn"], rmsnorm(hm, m["ln2"], cfg.norm_eps), cfg.act)
+        labels2 = jnp.roll(labels, -1, axis=1)
+        loss = loss + 0.3 * chunked_ce(hm, out_w, labels2)
+    return loss
+
+
+# ================================================================ decode
+
+
+def _cache_len(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ArchConfig, rt: Runtime, batch: int, max_len: int,
+               enc_len: int = 0, abstract: bool = False):
+    """Stacked-over-layers cache pytree. ``pos`` counts tokens generated."""
+    dt = rt.cdtype
+    L = cfg.n_layers
+    S = _cache_len(cfg, max_len)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    fam = cfg.family
+
+    def Z(shape, dtype=dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    pos = Z((batch,), jnp.int32)
+    if fam in ("dense", "vlm"):
+        return {"k": Z((L, batch, S, hkv, hd)), "v": Z((L, batch, S, hkv, hd)), "pos": pos}
+    if fam == "moe":
+        if cfg.mla is not None:
+            m = cfg.mla
+            nd = cfg.moe.first_dense_layers
+            c = {
+                "c_kv": Z((L, batch, S, m.kv_lora_rank)),
+                "k_rope": Z((L, batch, S, m.qk_rope_head_dim)),
+                "pos": pos,
+            }
+            return c
+        return {"k": Z((L, batch, S, hkv, hd)), "v": Z((L, batch, S, hkv, hd)), "pos": pos}
+    if fam == "ssm":
+        H, K = cfg.n_heads, cfg.d_model // cfg.n_heads
+        return {
+            "wkv": Z((L, batch, H, K, K), jnp.float32),
+            "shift1": Z((L, batch, 1, cfg.d_model)),
+            "shift2": Z((L, batch, 1, cfg.d_model)),
+            "pos": pos,
+        }
+    if fam == "hybrid":
+        di = cfg.ssm.expand * cfg.d_model
+        H = di // cfg.ssm.head_dim
+        P, N = cfg.ssm.head_dim, cfg.ssm.d_state
+        c = {
+            "ssm": Z((L, batch, H, P, N), jnp.float32),
+            "attn_k": Z((cfg.n_layers // (cfg.attn_every or cfg.n_layers), batch, S, hkv, hd)),
+            "attn_v": Z((cfg.n_layers // (cfg.attn_every or cfg.n_layers), batch, S, hkv, hd)),
+            "pos": pos,
+        }
+        if cfg.ssm.conv_dim:
+            c["conv"] = Z((L, batch, cfg.ssm.conv_dim - 1, di + 2 * H * N))
+        return c
+    if fam == "encdec":
+        return {
+            "k": Z((L, batch, S, hkv, hd)),
+            "v": Z((L, batch, S, hkv, hd)),
+            "enc_k": Z((L, batch, enc_len, hkv, hd)),
+            "enc_v": Z((L, batch, enc_len, hkv, hd)),
+            "pos": pos,
+        }
+    raise ValueError(fam)
+
+
+def abstract_cache(cfg, rt, batch, max_len, enc_len=0):
+    return init_cache(cfg, rt, batch, max_len, enc_len, abstract=True)
+
+
+def decode_step(params, cfg: ArchConfig, rt: Runtime, cache, tokens: jax.Array):
+    """One decode step. tokens: (B, 1) -> logits (B, 1, V), new cache."""
+    x = params["embed"][tokens].astype(rt.cdtype)
+    B = tokens.shape[0]
+    fam = cfg.family
+    pos = cache["pos"]
+
+    if fam in ("dense", "vlm") or (fam == "moe" and cfg.mla is None):
+        blocks = params["blocks"]
+        dense_blocks = params.get("dense_blocks")
+
+        def step(h, layer):
+            p, kc, vc = layer
+            sub = {"k": kc, "v": vc, "pos": pos}
+            a, sub = attention_decode_apply(p["attn"], rmsnorm(h, p["ln1"], cfg.norm_eps), sub, cfg, rt)
+            h = h + a
+            inner = rmsnorm(h, p["ln2"], cfg.norm_eps)
+            if "moe" in p:
+                h = h + moe_apply(p["moe"], inner, cfg, rt)
+            else:
+                h = h + ffn_apply(p["ffn"], inner, cfg.act)
+            return h, (sub["k"], sub["v"])
+
+        nd = cfg.moe.first_dense_layers if (fam == "moe" and cfg.moe) else 0
+        ks, vs = cache["k"], cache["v"]
+        new_k, new_v = [], []
+        if dense_blocks is not None and nd:
+            def dstep(h, layer):
+                return step(h, layer)
+            x, (k2, v2) = jax.lax.scan(
+                lambda h, l: dstep(h, l), x,
+                (dense_blocks, ks[:nd], vs[:nd]),
+            )
+            new_k.append(k2)
+            new_v.append(v2)
+            ks, vs = ks[nd:], vs[nd:]
+        x, (k2, v2) = jax.lax.scan(lambda h, l: step(h, l), x, (blocks, ks, vs))
+        new_k.append(k2)
+        new_v.append(v2)
+        cache = dict(cache, k=jnp.concatenate(new_k, 0), v=jnp.concatenate(new_v, 0), pos=pos + 1)
+
+    elif fam == "moe":  # MLA
+        nd = cfg.moe.first_dense_layers
+
+        def mk_step(has_moe):
+            def step(h, layer):
+                p, ckv, krope = layer
+                sub = {"c_kv": ckv, "k_rope": krope, "pos": pos}
+                a, sub = mla_decode_apply(p["attn"], rmsnorm(h, p["ln1"], cfg.norm_eps), sub, cfg, rt)
+                h = h + a
+                inner = rmsnorm(h, p["ln2"], cfg.norm_eps)
+                h = h + (moe_apply(p["moe"], inner, cfg, rt) if has_moe else ffn_apply(p["ffn"], inner, cfg.act))
+                return h, (sub["c_kv"], sub["k_rope"])
+            return step
+
+        cs, krs = cache["c_kv"], cache["k_rope"]
+        outs_c, outs_r = [], []
+        if nd:
+            x, (c2, r2) = jax.lax.scan(mk_step(False), x, (params["dense_blocks"], cs[:nd], krs[:nd]))
+            outs_c.append(c2); outs_r.append(r2)
+            cs, krs = cs[nd:], krs[nd:]
+        x, (c2, r2) = jax.lax.scan(mk_step(True), x, (params["blocks"], cs, krs))
+        outs_c.append(c2); outs_r.append(r2)
+        cache = dict(cache, c_kv=jnp.concatenate(outs_c, 0), k_rope=jnp.concatenate(outs_r, 0), pos=pos + 1)
+
+    elif fam == "ssm":
+        def step(h, layer):
+            p, wkv, s1, s2 = layer
+            a, st = rwkv6_decode_apply(p["tmix"], rmsnorm(h, p["ln1"], cfg.norm_eps), {"wkv": wkv, "shift": s1}, cfg, rt)
+            h = h + a
+            inner = rmsnorm(h, p["ln2"], cfg.norm_eps)
+            h = h + _rwkv_cmix(p["cmix"], inner, prev=s2)
+            return h, (st["wkv"], st["shift"], inner)
+
+        x, (wkv2, s1n, s2n) = jax.lax.scan(
+            step, x, (params["blocks"], cache["wkv"], cache["shift1"], cache["shift2"])
+        )
+        cache = dict(cache, wkv=wkv2, shift1=s1n, shift2=s2n, pos=pos + 1)
+
+    elif fam == "hybrid":
+        every = cfg.attn_every or cfg.n_layers
+        groups = cfg.n_layers // every
+        gp = jax.tree.map(lambda a: a.reshape((groups, every) + a.shape[1:]), params["blocks"])
+        sa = params["shared_attn"]
+        ssm_g = cache["ssm"].reshape((groups, every) + cache["ssm"].shape[1:])
+        conv_g = cache["conv"].reshape((groups, every) + cache["conv"].shape[1:]) if "conv" in cache else None
+        new_ssm, new_conv, new_ak, new_av = [], [], [], []
+        for g in range(groups):
+            if conv_g is not None:
+                def step(h, layer):
+                    p, ssm_s, conv_s = layer
+                    a, st = mamba2_decode_apply(p["mamba"], rmsnorm(h, p["ln"], cfg.norm_eps),
+                                                {"ssm": ssm_s, "conv": conv_s}, cfg, rt)
+                    return h + a, (st["ssm"], st["conv"])
+                x, (s2, c2) = jax.lax.scan(step, x, (jax.tree.map(lambda a: a[g], gp), ssm_g[g], conv_g[g]))
+                new_conv.append(c2)
+            else:
+                def step(h, layer):
+                    p, ssm_s = layer
+                    a, st = mamba2_decode_apply(p["mamba"], rmsnorm(h, p["ln"], cfg.norm_eps),
+                                                {"ssm": ssm_s}, cfg, rt)
+                    return h + a, st["ssm"]
+                x, s2 = jax.lax.scan(step, x, (jax.tree.map(lambda a: a[g], gp), ssm_g[g]))
+            new_ssm.append(s2)
+            sub = {"k": cache["attn_k"][g], "v": cache["attn_v"][g], "pos": pos}
+            a, sub = attention_decode_apply(sa["attn"], rmsnorm(x, sa["ln1"], cfg.norm_eps), sub, cfg, rt)
+            x = x + a
+            x = x + ffn_apply(sa["ffn"], rmsnorm(x, sa["ln2"], cfg.norm_eps), cfg.act)
+            new_ak.append(sub["k"])
+            new_av.append(sub["v"])
+        cache = dict(
+            cache,
+            ssm=jnp.concatenate(new_ssm, 0).reshape(cache["ssm"].shape),
+            attn_k=jnp.stack(new_ak, 0),
+            attn_v=jnp.stack(new_av, 0),
+            pos=pos + 1,
+        )
+        if new_conv:
+            cache["conv"] = jnp.concatenate(new_conv, 0).reshape(cache["conv"].shape)
+
+    elif fam == "encdec":
+        def step(h, layer):
+            p, kc, vc, ek, ev = layer
+            sub = {"k": kc, "v": vc, "pos": pos}
+            a, sub = attention_decode_apply(p["attn"], rmsnorm(h, p["ln1"], cfg.norm_eps), sub, cfg, rt)
+            h = h + a
+            # cross-attention over precomputed encoder KV
+            hn = rmsnorm(h, p["ln3"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhe->bshe", hn, p["xattn"]["wq"])
+            Bq = q.shape[0]
+            g = cfg.n_heads // cfg.n_kv_heads
+            qg = q.reshape(Bq, cfg.n_kv_heads, g, cfg.head_dim)
+            s = jnp.einsum("bhgd,bkhd->bhgk", qg, ek).astype(jnp.float32) / (cfg.head_dim ** 0.5)
+            att = jax.nn.softmax(s, axis=-1).astype(ev.dtype)
+            o = jnp.einsum("bhgk,bkhd->bhgd", att, ev).reshape(Bq, 1, cfg.n_heads, cfg.head_dim)
+            h = h + jnp.einsum("bshe,hed->bsd", o, p["xattn"]["wo"])
+            h = h + ffn_apply(p["ffn"], rmsnorm(h, p["ln2"], cfg.norm_eps), cfg.act)
+            return h, (sub["k"], sub["v"])
+
+        x, (k2, v2) = jax.lax.scan(
+            step, x, (params["blocks"], cache["k"], cache["v"], cache["enc_k"], cache["enc_v"])
+        )
+        cache = dict(cache, k=k2, v=v2, pos=pos + 1)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    out_w = params["embed"] if cfg.tie_embeddings else params["out"]
+    logits = jnp.einsum("bsd,vd->bsv", x, out_w)
+    return logits, cache

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+TPU-native design: expert weights are stacked (E, D, F) and sharded over
+the "model" mesh axis (expert parallelism); tokens are dispatched into a
+capacity-bounded (E, C, D) buffer via scatter (XLA SPMD turns the
+cross-shard movement into all-to-all), processed with a single batched
+einsum per projection (MXU-friendly dense grouped matmul), and combined
+back with the routing weights. Shared experts (DeepSeek) run densely.
+
+The capacity factor bounds both memory and the dispatch collective —
+dropped tokens fall back to the residual path, as in GShard/Switch.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, MoEConfig
+from .params import ParamSpec
+from .runtime import Runtime
+
+__all__ = ["moe_specs", "moe_apply"]
+
+
+def moe_specs(cfg: ArchConfig, stacked: Optional[int] = None, dtype=jnp.bfloat16) -> Dict[str, ParamSpec]:
+    e = cfg.moe
+    d = cfg.d_model
+    f = e.d_ff_expert
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    glu = cfg.act == "swiglu"
+    specs: Dict[str, ParamSpec] = {
+        "router": ParamSpec(lead + (d, e.n_experts), lx + ("embed", None), jnp.float32, "scaled"),
+        "w_up": ParamSpec(lead + (e.n_experts, d, f), lx + ("experts", "embed", "expert_mlp"), dtype, "scaled"),
+        "w_down": ParamSpec(lead + (e.n_experts, f, d), lx + ("experts", "expert_mlp", "embed"), dtype, "scaled"),
+    }
+    if glu:
+        specs["w_gate"] = ParamSpec(lead + (e.n_experts, d, f), lx + ("experts", "embed", "expert_mlp"), dtype, "scaled")
+    if e.n_shared:
+        fs = f * e.n_shared
+        specs["ws_up"] = ParamSpec(lead + (d, fs), lx + ("embed", "mlp"), dtype, "scaled")
+        specs["ws_down"] = ParamSpec(lead + (fs, d), lx + ("mlp", "embed"), dtype, "scaled")
+        if glu:
+            specs["ws_gate"] = ParamSpec(lead + (d, fs), lx + ("embed", "mlp"), dtype, "scaled")
+    return specs
+
+
+def moe_apply(p: Dict[str, jax.Array], x: jax.Array, cfg: ArchConfig, rt: Runtime) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    Capacity positions are assigned *per batch row* ("local groups",
+    GShard-style): the cumulative-count scan runs over each row's S*K
+    slots independently, so it parallelizes over the (data-sharded) batch
+    instead of serializing a global (B*S*K, E) cumsum across the whole
+    mesh — the global variant measured 3.5x worse on the collective
+    roofline term (§Perf mixtral iteration 1).
+    """
+    e = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    glu = cfg.act == "swiglu"
+
+    # ---- routing (fp32 for stability)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, e.top_k)                   # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cf = rt.capacity_factor if rt.capacity_factor is not None else e.capacity_factor
+    # per-row capacity; the dispatch buffer is (B, E, Cr, D)
+    Cr = max(int(S * e.top_k * cf / e.n_experts), 4)
+
+    # ---- per-row capacity assignment
+    row_expert = expert_idx.reshape(B, S * e.top_k)                         # (B, SK)
+    onehot = jax.nn.one_hot(row_expert, e.n_experts, dtype=jnp.int32)       # (B, SK, E)
+    prior = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_expert = jnp.take_along_axis(prior, row_expert[..., None], axis=2)[..., 0]
+    keep = pos_in_expert < Cr
+    slot = jnp.where(keep, pos_in_expert, Cr)                               # overflow bucket Cr
+
+    # ---- dispatch: (B, E, Cr+1, D); scatter is row-local
+    xt = x.reshape(B, S, D)
+    tok_idx = jnp.repeat(jnp.arange(S), e.top_k)                            # (SK,)
+    buf = jnp.zeros((B, e.n_experts, Cr + 1, D), x.dtype)
+    bidx = jnp.arange(B)[:, None]
+    buf = buf.at[bidx, row_expert, slot].add(xt[:, tok_idx, :])
+    expert_in = buf[:, :, :Cr, :].transpose(1, 0, 2, 3).reshape(e.n_experts, B * Cr, D)
+    C = B * Cr
+
+    # ---- expert FFN (batched over E; "experts" axis is model-sharded)
+    if glu:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])) * jnp.einsum(
+            "ecd,edf->ecf", expert_in, p["w_up"]
+        )
+    else:
+        r = jax.nn.relu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"]))
+        h = r * r
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])                 # (E, C, D)
+
+    # ---- combine: gather back per row + weight
+    per_row = expert_out.reshape(e.n_experts, B, Cr, D).transpose(1, 0, 2, 3)  # (B, E, Cr, D)
+    padded = jnp.concatenate([per_row, jnp.zeros((B, e.n_experts, 1, D), per_row.dtype)], axis=2)
+    gathered = padded[bidx, row_expert, slot]                               # (B, SK, D)
+    weighted = gathered * gate_vals.reshape(B, S * e.top_k)[..., None].astype(gathered.dtype)
+    out = weighted.reshape(B, S, e.top_k, D).sum(axis=2)
+
+    # ---- shared experts (always-on)
+    if e.n_shared:
+        if glu:
+            hs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["ws_gate"])) * jnp.einsum(
+                "bsd,df->bsf", x, p["ws_up"])
+        else:
+            r = jax.nn.relu(jnp.einsum("bsd,df->bsf", x, p["ws_up"]))
+            hs = r * r
+        out = out + jnp.einsum("bsf,fd->bsd", hs, p["ws_down"])
+
+    return out.reshape(B, S, D)

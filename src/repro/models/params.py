@@ -1,0 +1,96 @@
+"""Parameter specification pytrees.
+
+Model code declares parameters as ``ParamSpec`` leaves (shape + dtype +
+*logical axis names*). One spec tree serves three consumers:
+
+  * ``abstract_params``  -> ShapeDtypeStruct tree (dry-run: no allocation)
+  * ``init_params``      -> real arrays (smoke tests / examples)
+  * ``spec_shardings``   -> NamedSharding tree via the logical->mesh rules
+                            in distributed/sharding.py
+
+Logical axis vocabulary: "layers" (scanned stack), "embed" (d_model),
+"vocab", "heads", "kv_heads", "qk" (per-head q/k dims), "mlp" (d_ff),
+"experts", "expert_mlp", "ssm_inner", "state", "conv", "rank" (low-rank),
+None (never sharded).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "abstract_params", "init_params", "spec_shardings", "param_bytes"]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"       # normal | zeros | ones | scaled (1/sqrt(fan_in))
+    fan_in_axis: int = -2
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(specs) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
+    )
+
+
+def init_params(specs, key: jax.Array, dtype_override=None) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for s, k in zip(leaves, keys):
+        dt = dtype_override or s.dtype
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        else:
+            fan_in = s.shape[s.fan_in_axis] if len(s.shape) >= 2 else s.shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1)) if s.init == "scaled" else 0.02
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def spec_shardings(specs, mesh, rules: Dict[Optional[str], Any]) -> Any:
+    """Map logical axes -> NamedSharding using ``rules`` (see distributed)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def one(s: ParamSpec):
+        used: set = set()
+        parts = []
+        for ax in s.axes:
+            mesh_axes = rules.get(ax)
+            if mesh_axes is None:
+                parts.append(None)
+                continue
+            if isinstance(mesh_axes, str):
+                mesh_axes = (mesh_axes,)
+            free = tuple(a for a in mesh_axes if a not in used and a in mesh.axis_names)
+            if not free:
+                parts.append(None)
+                continue
+            used.update(free)
+            parts.append(free if len(free) > 1 else free[0])
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves)

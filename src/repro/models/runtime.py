@@ -1,0 +1,56 @@
+"""Runtime (system) configuration — the knobs the framework itself exposes.
+
+These are deliberately the same kind of object as sparksim's Spark knobs:
+the jaxwl objective tunes them with MFTune. Everything here changes *how*
+a model runs, never *what* it computes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["Runtime"]
+
+
+@dataclass(frozen=True)
+class Runtime:
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    softmax_dtype: str = "float32"
+    opt_state_dtype: str = "float32"       # bf16 halves optimizer memory
+    matmul_precision: str = "default"      # default | high | highest
+    # memory/compute scheduling
+    remat: str = "none"                    # none | full | dots | attn
+    scan_layers: bool = True
+    scan_unroll: int = 1
+    # attention
+    attn_impl: str = "xla"                 # xla | flash (pallas) | chunked
+    attn_chunk: int = 2048                 # kv-chunk for chunked attention
+    q_block: int = 512                     # pallas flash block sizes
+    kv_block: int = 1024
+    # MoE
+    moe_impl: str = "dense"                # dense (einsum capacity) | ragged
+    capacity_factor: Optional[float] = None  # None => arch default
+    # distribution
+    dp_size: Optional[int] = None          # None => infer from mesh
+    act_shard: bool = True                 # constrain activations to batch-DP
+    fsdp: bool = True                      # shard params over data axis (ZeRO-3)
+    zero1: bool = True                     # shard optimizer state over data axis
+    seq_shard: bool = False                # sequence parallelism for long ctx
+    grad_compression: str = "none"         # none | int8 | topk
+    overlap_collective_matmul: bool = False
+    # pipeline (optional; carved from the data axis)
+    pp_stages: int = 1
+    pp_microbatches: int = 1
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)

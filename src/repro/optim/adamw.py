@@ -1,0 +1,78 @@
+"""AdamW with dtype-configurable, shardable state.
+
+State moments inherit the parameter sharding (with FSDP that is already
+ZeRO-3; without it the caller may extend the sharding over the data axes —
+ZeRO-1 — since the update is elementwise and any layout is valid).
+Global-norm clipping is fused into the update.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_init_abstract", "adamw_update"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array        # () int32
+    m: Any                 # pytree like params
+    v: Any
+
+
+def adamw_init(params, dtype=jnp.float32) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(jnp.zeros((), jnp.int32), jax.tree.map(z, params), jax.tree.map(z, params))
+
+
+def adamw_init_abstract(params, dtype=jnp.float32) -> AdamWState:
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dtype)
+    return AdamWState(
+        jax.ShapeDtypeStruct((), jnp.int32), jax.tree.map(z, params), jax.tree.map(z, params)
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr: float | jax.Array = 1e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    if clip_norm is not None:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    else:
+        scale = 1.0
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + g32 * g32 * (1 - b2)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return new_p, AdamWState(step, new_m, new_v)

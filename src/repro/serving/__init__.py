@@ -1,0 +1,3 @@
+from .engine import ServingEngine, prefill_with_cache
+
+__all__ = ["ServingEngine", "prefill_with_cache"]

@@ -1,0 +1,5 @@
+from .hlo_analysis import analyze_hlo, HloCosts
+from .roofline import roofline_terms, RooflineReport, V5E
+from .flops import model_flops
+
+__all__ = ["analyze_hlo", "HloCosts", "roofline_terms", "RooflineReport", "V5E", "model_flops"]

@@ -1,0 +1,114 @@
+"""Three-term TPU v5e roofline from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs   / (chips * peak_FLOP/s)
+    memory     = HLO_bytes   / (chips * HBM_bw)
+    collective = coll_bytes  / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from the while-loop-corrected HLO walker
+(tools/hlo_analysis — see its docstring for why cost_analysis() alone is
+insufficient on this backend); collective bytes are summed over all-gather
+/ all-reduce / reduce-scatter / all-to-all / collective-permute ops.
+
+The walker sees the *per-device* SPMD program, so its totals are already
+per-chip: terms divide by per-chip peaks only.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from .hlo_analysis import HloCosts
+
+__all__ = ["V5E", "RooflineReport", "roofline_terms"]
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops: float     # bf16 FLOP/s
+    hbm_bw: float         # bytes/s
+    link_bw: float        # ICI bytes/s per link
+
+
+V5E = ChipSpec("tpu-v5e", 197e12, 819e9, 50e9)
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device HLO totals
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collectives: Dict[str, float] = field(default_factory=dict)
+    model_flops: float = 0.0           # analytic 6*N*D (global)
+    raw_cost_analysis_flops: float = 0.0
+    raw_cost_analysis_bytes: float = 0.0
+
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (perfect-overlap) step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs): compiled-compute usefulness."""
+        tot = self.chips * self.hlo_flops
+        return self.model_flops / tot if tot > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the modeled step
+        time: (MODEL_FLOPS / step_time) / (chips * peak)."""
+        if self.step_time_s <= 0:
+            return 0.0
+        achieved = self.model_flops / self.step_time_s
+        return achieved / (self.chips * V5E.peak_flops)
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes, "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives, "model_flops": self.model_flops,
+            "raw_cost_analysis_flops": self.raw_cost_analysis_flops,
+            "raw_cost_analysis_bytes": self.raw_cost_analysis_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s, "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_terms(
+    arch: str, shape: str, mesh: str, chips: int,
+    costs: HloCosts, model_fl: float,
+    raw_flops: float = 0.0, raw_bytes: float = 0.0,
+    chip: ChipSpec = V5E,
+) -> RooflineReport:
+    r = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=costs.flops, hlo_bytes=costs.bytes,
+        collective_bytes=costs.collective_bytes,
+        collectives=dict(costs.collectives),
+        model_flops=model_fl,
+        raw_cost_analysis_flops=raw_flops, raw_cost_analysis_bytes=raw_bytes,
+    )
+    r.compute_s = costs.flops / chip.peak_flops
+    r.memory_s = costs.bytes / chip.hbm_bw
+    r.collective_s = costs.collective_bytes / chip.link_bw
+    return r

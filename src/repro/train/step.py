@@ -1,0 +1,100 @@
+"""Step factories: train / prefill / decode programs + their input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of
+an (arch x shape) cell — weak-type-correct, shardable, no allocation —
+exactly what the multi-pod dry-run lowers against. Modality frontends
+(vision/audio) are stubs: the specs carry precomputed patch/frame
+embeddings next to the token stream.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import (
+    Runtime,
+    abstract_cache,
+    build_param_specs,
+    decode_step,
+    forward,
+    loss_fn,
+)
+from ..optim import adamw_update
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step", "input_specs"]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, rt: Optional[Runtime] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one cell's step inputs."""
+    rt = rt or Runtime()
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), rt.cdtype)
+        if cfg.frontend == "vision":
+            # M-RoPE 3D position ids from the (stub) vision frontend
+            batch["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), rt.cdtype)
+        if cfg.frontend == "vision":
+            batch["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len cache
+    cache = abstract_cache(cfg, rt, B, S, enc_len=(S if cfg.family == "encdec" else 0))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": cache,
+    }
+
+
+def make_train_step(cfg: ArchConfig, rt: Runtime, lr: float = 1e-4):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, rt, batch))(params)
+        if rt.grad_compression != "none":
+            from ..distributed.compression import compress_grads
+
+            grads = compress_grads(grads, rt.grad_compression)
+        new_params, new_state = adamw_update(params, grads, opt_state, lr=lr)
+        return new_params, new_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, rt: Runtime):
+    """(params, batch) -> logits; the cache-building pass is the forward."""
+
+    def prefill_step(params, batch):
+        logits = forward(
+            params, cfg, rt,
+            tokens=batch.get("tokens"),
+            inputs_embeds=batch.get("inputs_embeds"),
+            positions=batch.get("positions"),
+            enc_embeds=batch.get("enc_embeds"),
+        )
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, rt: Runtime):
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cfg, rt, cache, tokens)
+
+    return serve_step

@@ -1,0 +1,115 @@
+"""Training loop: steps, checkpoints, preemption safety, metrics.
+
+The loop is deliberately boring — all the interesting behavior lives in
+the step function (models/, optim/) and the fault-tolerance machinery
+(checkpoint.py, data/pipeline.py). ``Trainer.run`` resumes exactly from
+the newest checkpoint (params, opt state, data cursor, RNG), saves every
+``save_every`` steps asynchronously, and installs a SIGTERM hook that
+commits a final checkpoint before exit (preemption safety).
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..data import SyntheticTokenPipeline
+from ..models import Runtime, build_param_specs, init_params
+from ..optim import adamw_init
+from .checkpoint import CheckpointManager
+from .step import make_train_step
+
+__all__ = ["Trainer"]
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        rt: Runtime,
+        seq_len: int = 256,
+        global_batch: int = 8,
+        lr: float = 3e-4,
+        seed: int = 0,
+        ckpt_dir: Optional[str] = None,
+        save_every: int = 50,
+    ):
+        self.cfg = cfg
+        self.rt = rt
+        self.lr = lr
+        self.save_every = save_every
+        self.pipeline = SyntheticTokenPipeline(cfg.vocab, seq_len, global_batch, seed=seed)
+        key = jax.random.PRNGKey(seed)
+        self.params = init_params(build_param_specs(cfg, rt), key)
+        self.opt = adamw_init(self.params, dtype=jnp.dtype(rt.opt_state_dtype))
+        self.step_fn = jax.jit(make_train_step(cfg, rt, lr=lr), donate_argnums=(0, 1))
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.step = 0
+        self._preempted = False
+
+    # ----------------------------------------------------------- persistence
+    def _state(self) -> Dict[str, Any]:
+        return {"params": self.params, "opt": self.opt}
+
+    def maybe_resume(self) -> bool:
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return False
+        state, extra = self.ckpt.restore(self._state())
+        state = jax.tree.map(jnp.asarray, state)  # numpy -> device arrays
+        self.params, self.opt = state["params"], state["opt"]
+        self.step = int(extra["step"])
+        self.pipeline.restore(extra["data"])
+        return True
+
+    def save(self, block: bool = False) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(
+            self.step, self._state(),
+            extra={"step": self.step, "data": self.pipeline.state()},
+            block=block,
+        )
+
+    def _install_preemption_hook(self) -> None:
+        def handler(signum, frame):
+            self._preempted = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not the main thread
+
+    # ------------------------------------------------------------------ run
+    def run(self, steps: int, log_every: int = 10,
+            on_metrics: Optional[Callable[[int, Dict[str, float]], None]] = None):
+        self._install_preemption_hook()
+        self.maybe_resume()
+        losses = []
+        t0 = time.perf_counter()
+        target = self.step + steps
+        while self.step < target and not self._preempted:
+            batch = next(self.pipeline)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt, metrics = self.step_fn(self.params, self.opt, batch)
+            self.step += 1
+            losses.append(float(metrics["loss"]))
+            if self.step % log_every == 0:
+                dt = (time.perf_counter() - t0) / log_every
+                m = {"loss": float(np.mean(losses[-log_every:])), "s_per_step": dt}
+                if on_metrics:
+                    on_metrics(self.step, m)
+                else:
+                    print(f"step {self.step}: loss={m['loss']:.4f} ({dt:.2f}s/step)", flush=True)
+                t0 = time.perf_counter()
+            if self.ckpt is not None and self.step % self.save_every == 0:
+                self.save()
+        if self.ckpt is not None:
+            self.save(block=True)
+            self.ckpt.wait()
+        return losses

@@ -1,0 +1,3 @@
+from .workload import EvalResult, Workload, Budget
+
+__all__ = ["EvalResult", "Workload", "Budget"]

@@ -1,0 +1,76 @@
+"""ConfigSpace: encode/decode, LHS, restrictions (unit + property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BoolKnob, CatKnob, ConfigSpace, FloatKnob, IntKnob, Intervals
+
+
+def space():
+    return ConfigSpace([
+        FloatKnob("f", 0.5, 4.0),
+        FloatKnob("flog", 1.0, 1024.0, log=True),
+        IntKnob("i", 2, 64, log=True, default=8),
+        CatKnob("c", ("a", "b", "c"), default="b"),
+        BoolKnob("b", default=True),
+    ])
+
+
+def test_encode_decode_roundtrip_default():
+    s = space()
+    cfg = s.default()
+    dec = s.decode(s.encode(cfg))
+    assert dec["c"] == "b" and dec["b"] is True
+    assert abs(dec["f"] - cfg["f"]) < 1e-9
+    assert dec["i"] == cfg["i"]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_sample_within_bounds(seed):
+    s = space()
+    rng = np.random.default_rng(seed)
+    for cfg in s.sample(rng, 5):
+        assert 0.5 <= cfg["f"] <= 4.0
+        assert 1.0 <= cfg["flog"] <= 1024.0
+        assert 2 <= cfg["i"] <= 64
+        assert cfg["c"] in ("a", "b", "c")
+        u = s.encode(cfg)
+        assert np.all((u >= 0) & (u <= 1))
+
+
+def test_lhs_stratification():
+    s = ConfigSpace([FloatKnob("x", 0.0, 1.0)])
+    cfgs = s.lhs_sample(np.random.default_rng(0), 10)
+    xs = sorted(c["x"] for c in cfgs)
+    # exactly one sample per decile
+    for i, x in enumerate(xs):
+        assert i / 10 <= x <= (i + 1) / 10
+
+
+def test_intervals_restriction():
+    s = space()
+    r = s.restrict(keep=["f", "c"], ranges={"f": Intervals([(1.0, 1.5), (3.0, 3.5)])},
+                   cat_subsets={"c": ["a", "c"]})
+    assert set(r.names) == {"f", "c"}
+    rng = np.random.default_rng(0)
+    for cfg in r.sample(rng, 50):
+        assert (1.0 <= cfg["f"] <= 1.5) or (3.0 <= cfg["f"] <= 3.5)
+        assert cfg["c"] in ("a", "c")
+    # project clips into the union
+    assert r.project({"f": 2.2, "c": "b"})["f"] in (1.5, 3.0)
+
+
+def test_intervals_algebra():
+    iv = Intervals([(0, 1), (0.5, 2), (3, 4)])
+    assert iv.intervals == [(0.0, 2.0), (3.0, 4.0)]
+    assert iv.total_length == pytest.approx(3.0)
+    assert iv.contains(1.9) and not iv.contains(2.5)
+    assert iv.clip(2.4) == 2.0 and iv.clip(2.8) == 3.0
+
+
+def test_complete_fills_defaults():
+    s = space()
+    full = s.complete({"f": 1.25})
+    assert full["f"] == 1.25 and full["i"] == 8 and full["c"] == "b"

@@ -1,0 +1,125 @@
+"""Surrogates, Shapley, KDE, GBM, acquisition (unit + property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GaussianProcess,
+    GradientBoostedTrees,
+    ProbabilisticRandomForest,
+    WeightedKDE,
+    alpha_mass_categories,
+    alpha_mass_region,
+    expected_improvement,
+    kendall_tau,
+    rank_aggregate,
+    shapley_values,
+    shapley_values_exact,
+    silverman_bandwidth,
+)
+
+
+def _toy(n=80, d=5, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.random((n, d))
+    y = 3 * X[:, 0] - 2 * X[:, 1] ** 2 + 0.1 * rng.normal(size=n)
+    return X, y
+
+
+def test_prf_ranks_signal():
+    X, y = _toy()
+    m = ProbabilisticRandomForest(seed=0).fit(X, y)
+    Xt, yt = _toy(seed=1)
+    pred, var = m.predict(Xt)
+    tau, p = kendall_tau(pred, yt)
+    assert tau > 0.6 and p < 1e-6
+    assert np.all(var > 0)
+
+
+def test_gp_interpolates():
+    X, y = _toy(n=40)
+    m = GaussianProcess().fit(X, y)
+    pred, var = m.predict(X)
+    assert np.corrcoef(pred, y)[0, 1] > 0.95
+
+
+def test_gbm_fits():
+    X, y = _toy(n=120)
+    m = GradientBoostedTrees(seed=0).fit(X, y)
+    Xt, yt = _toy(seed=2)
+    tau, _ = kendall_tau(m.predict(Xt), yt)
+    assert tau > 0.55
+
+
+def test_shapley_mc_matches_exact():
+    rng = np.random.default_rng(0)
+    d = 4
+    w = np.array([2.0, -1.0, 0.5, 0.0])
+    f = lambda Z: Z @ w + 3 * Z[:, 0] * Z[:, 1]
+    x = rng.random(d)
+    bg = rng.random((12, d))
+    exact = shapley_values_exact(f, x, bg)
+    mc = shapley_values(f, x, bg, n_permutations=64, rng=np.random.default_rng(1))
+    assert np.abs(exact - mc).max() < 0.05
+    # additivity (exact by construction after the residual correction)
+    fx = f(x[None])[0]
+    f0 = f(bg).mean()
+    assert abs(mc.sum() - (fx - f0)) < 1e-9
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_shapley_additivity_property(seed):
+    rng = np.random.default_rng(seed)
+    d = 6
+    A = rng.normal(size=(d, d)) / d
+    f = lambda Z: np.einsum("ni,ij,nj->n", Z, A, Z)
+    x = rng.random(d)
+    bg = rng.random((8, d))
+    phi = shapley_values(f, x, bg, n_permutations=8, rng=rng)
+    assert abs(phi.sum() - (f(x[None])[0] - f(bg).mean())) < 1e-9
+
+
+def test_alpha_mass_region_bimodal():
+    rng = np.random.default_rng(0)
+    samples = np.concatenate([rng.normal(0.2, 0.02, 200), rng.normal(0.8, 0.02, 100)])
+    kde = WeightedKDE(samples, np.ones_like(samples))
+    region = alpha_mass_region(kde, 0.0, 1.0, alpha=0.65)
+    # bimodal: region should be a union excluding the middle
+    assert region.total_length < 0.5
+    assert region.contains(0.2)
+    assert not region.contains(0.5)
+    # higher alpha => larger region (monotonicity)
+    region9 = alpha_mass_region(kde, 0.0, 1.0, alpha=0.9)
+    assert region9.total_length >= region.total_length
+
+
+def test_alpha_mass_region_weights_matter():
+    samples = np.array([0.2] * 10 + [0.8] * 10)
+    w_left = np.array([10.0] * 10 + [0.1] * 10)
+    kde = WeightedKDE(samples, w_left, bandwidth=0.03)
+    region = alpha_mass_region(kde, 0.0, 1.0, alpha=0.6)
+    assert region.contains(0.2) and not region.contains(0.8)
+
+
+def test_alpha_mass_categories():
+    vals = ["a"] * 5 + ["b"] * 3 + ["c"]
+    kept = alpha_mass_categories(vals, [1.0] * len(vals), alpha=0.65)
+    assert "a" in kept and "c" not in kept
+
+
+def test_ei_positive_at_better_mean():
+    ei = expected_improvement(np.array([0.0, 10.0]), np.array([1.0, 1.0]), best=5.0)
+    assert ei[0] > ei[1] >= 0.0
+
+
+def test_rank_aggregate_weighting():
+    s1 = np.array([3.0, 2.0, 1.0])  # prefers idx 0
+    s2 = np.array([1.0, 2.0, 3.0])  # prefers idx 2
+    agg = rank_aggregate([s1, s2], [10.0, 0.1])
+    assert int(np.argmin(agg)) == 0
+
+
+def test_silverman_positive():
+    assert silverman_bandwidth(np.array([1.0, 2, 3, 4]), np.ones(4)) > 0

@@ -1,0 +1,147 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dt):
+    return TOL[dt]
+
+
+@pytest.mark.parametrize("S,Hkv,G,D", [(64, 1, 1, 16), (128, 2, 2, 32), (64, 2, 4, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 32)])
+def test_flash_attn_sweep(S, Hkv, G, D, dtype, causal, window):
+    from repro.kernels.flash_attn.ops import flash_attention
+    from repro.kernels.flash_attn.ref import attention_ref
+
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(hash((S, Hkv, G, D)) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv, G, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window, q_block=32, kv_block=32)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attn_grads_match_ref():
+    from repro.kernels.flash_attn.ops import flash_attention
+    from repro.kernels.flash_attn.ref import attention_ref
+
+    B, S, Hkv, G, D = 1, 64, 2, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv, G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    g1 = jax.grad(lambda *a: flash_attention(*a, q_block=16, kv_block=16).sum(), (0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: attention_ref(*a).astype(jnp.float32).sum(), (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("S,splits", [(128, 2), (256, 4), (96, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(S, splits, dtype):
+    from repro.kernels.flash_decode.ops import decode_attention
+    from repro.kernels.flash_decode.ref import decode_ref
+
+    B, Hkv, G, D = 2, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(S), 3)
+    q = jax.random.normal(ks[0], (B, Hkv, G, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    lens = jnp.array([S // 3, S], jnp.int32)
+    o = decode_attention(q, k, v, lens, kv_splits=splits, kv_block=32)
+    ref = decode_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("N,D", [(32, 64), (128, 96), (64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(N, D, dtype):
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+    x = jax.random.normal(jax.random.PRNGKey(N), (N, D), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(D), (D,), dtype)
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, w), np.float32),
+        np.asarray(rmsnorm_ref(x, w), np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype),
+    )
+
+
+def test_rmsnorm_grad():
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 48), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (48,), jnp.float32)
+    g1 = jax.grad(lambda x, w: rmsnorm(x, w).sum(), (0, 1))(x, w)
+    g2 = jax.grad(lambda x, w: rmsnorm_ref(x, w).sum(), (0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("S,P,N,chunk", [(64, 8, 4, 16), (128, 16, 8, 32)])
+def test_mamba2_ssd_sweep(S, P, N, chunk):
+    from repro.kernels.mamba2_ssd.ops import ssd_scan
+    from repro.kernels.mamba2_ssd.ref import ssd_ref
+
+    BH = 2
+    ks = jax.random.split(jax.random.PRNGKey(S + P), 4)
+    x = jax.random.normal(ks[0], (BH, S, P), jnp.float32) * 0.5
+    B = jax.random.normal(ks[1], (BH, S, N), jnp.float32) * 0.5
+    C = jax.random.normal(ks[2], (BH, S, N), jnp.float32) * 0.5
+    a = -jax.nn.softplus(jax.random.normal(ks[3], (BH, S)))
+    y = ssd_scan(x, B, C, a, chunk=chunk)
+    ref, _ = ssd_ref(x[:, :, None], B[:, :, None], C[:, :, None], a[:, :, None])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref[:, :, 0]), atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("S,K,chunk", [(64, 16, 16), (128, 32, 32)])
+def test_rwkv6_wkv_sweep(S, K, chunk):
+    from repro.kernels.rwkv6_wkv.ops import wkv_scan
+    from repro.kernels.rwkv6_wkv.ref import wkv_ref
+
+    BH = 2
+    ks = jax.random.split(jax.random.PRNGKey(S + K), 5)
+    r = jax.random.normal(ks[0], (BH, S, K), jnp.float32) * 0.5
+    k = jax.random.normal(ks[1], (BH, S, K), jnp.float32) * 0.5
+    v = jax.random.normal(ks[2], (BH, S, K), jnp.float32) * 0.5
+    w = jnp.maximum(-jax.nn.softplus(jax.random.normal(ks[3], (BH, S, K))) - 0.1, -2.0)
+    u = jax.random.normal(ks[4], (BH, K), jnp.float32) * 0.3
+
+    def one(rr, kx, vx, wx, ux):
+        y, _ = wkv_ref(rr[None, :, None], kx[None, :, None], vx[None, :, None],
+                       wx[None, :, None], ux[None])
+        return y[0, :, 0]
+
+    y = wkv_scan(r, k, v, w, u, chunk=chunk)
+    ref = jax.vmap(one)(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("E,C,D,F", [(2, 32, 48, 24), (4, 64, 96, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm_sweep(E, C, D, F, dtype):
+    from repro.kernels.moe_gmm.ops import grouped_matmul
+    from repro.kernels.moe_gmm.ref import gmm_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(E * C), 2)
+    x = jax.random.normal(ks[0], (E, C, D), dtype)
+    w = jax.random.normal(ks[1], (E, D, F), dtype)
+    gs = jnp.array([C] + [C // 2] * (E - 1), jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(grouped_matmul(x, w, gs), np.float32),
+        np.asarray(gmm_ref(x, w, gs), np.float32),
+        atol=_tol(dtype) * D, rtol=_tol(dtype),
+    )

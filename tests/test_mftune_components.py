@@ -1,0 +1,160 @@
+"""Similarity, compression, fidelity partitioning, hyperband, warm start."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CandidateGenerator,
+    ConfigSpace,
+    FloatKnob,
+    HyperbandRunner,
+    KnowledgeBase,
+    Observation,
+    SimilarityEngine,
+    SpaceCompressor,
+    TaskRecord,
+    WarmStartQueue,
+    collect_query_stats,
+    early_stop_subset,
+    greedy_query_subset,
+    hb_schedule,
+    phase1_config,
+    subset_correlation,
+)
+from repro.core.similarity import TaskWeights
+
+
+def _space(d=6):
+    return ConfigSpace([FloatKnob(f"x{i}", 0.0, 1.0) for i in range(d)])
+
+
+def _record(task_id, space, f, n=30, seed=0, queries=("q1", "q2")):
+    rng = np.random.default_rng(seed)
+    rec = TaskRecord(task_id=task_id, queries=list(queries))
+    for cfg in space.sample(rng, n):
+        perf = f(cfg)
+        rec.observations.append(Observation(config=cfg, performance=perf, fidelity=1.0))
+    return rec
+
+
+def test_eq2_similarity_orders_tasks():
+    space = _space()
+    f = lambda c: 5 * c["x0"] + c["x1"]
+    g = lambda c: -5 * c["x0"] - c["x1"]  # anti-correlated
+    kb = KnowledgeBase()
+    kb.add_task(_record("same", space, f, seed=1), persist=False)
+    kb.add_task(_record("anti", space, g, seed=2), persist=False)
+    target = _record("target", space, f, n=20, seed=3)
+    kb.add_task(target, persist=False)
+    eng = SimilarityEngine(space, kb, seed=0)
+    w = eng.compute(target)
+    assert w.weights.get("same", 0) > 0
+    assert "anti" not in w.weights  # negative similarity filtered
+    assert not w.used_meta  # enough data for the transition
+
+
+def test_transition_uses_meta_when_data_sparse():
+    space = _space()
+    f = lambda c: 5 * c["x0"]
+    kb = KnowledgeBase()
+    for i in range(3):
+        r = _record(f"s{i}", space, f, seed=i)
+        r.meta_features = list(np.ones(4) * i)
+        kb.add_task(r, persist=False)
+    target = _record("t", space, f, n=2, seed=9)  # too few obs for Eq. 2
+    target.meta_features = [1.0, 1.0, 1.0, 1.0]
+    kb.add_task(target, persist=False)
+    eng = SimilarityEngine(space, kb, seed=0)
+    w = eng.compute(target)
+    assert w.used_meta
+
+
+def test_space_compression_drops_noise_keeps_signal():
+    space = _space(6)
+    # only x0/x1 matter; optimum near x0=0.1, x1=0.9
+    f = lambda c: (c["x0"] - 0.1) ** 2 + (c["x1"] - 0.9) ** 2 + 1.0
+    kb_tasks = {}
+    for i in range(3):
+        kb_tasks[f"s{i}"] = _record(f"s{i}", space, f, n=60, seed=i)
+    comp = SpaceCompressor(space, alpha=0.65, seed=0)
+    weights = TaskWeights(weights={k: 1 / 3 for k in kb_tasks}, similarities={}, used_meta=False)
+    restricted = comp.compress(weights, kb_tasks)
+    assert "x0" in restricted.by_name and "x1" in restricted.by_name
+    assert len(restricted) < 6  # some noise knobs dropped
+    k0 = restricted.by_name["x0"]
+    iv = k0.active_intervals()
+    assert iv.total_length < 0.95  # range actually compressed
+    # the region concentrates near the optimum (alpha-mass regions can clip
+    # the exact optimum when promising samples skew to one side — the
+    # paper's own Fig. 6c caveat for small alpha)
+    assert abs(iv.clip(0.1) - 0.1) < 0.1
+
+
+def _query_stats(seed=0, n_cfg=25, m=6):
+    """Three queries carry the aggregate signal; three are cheap noise."""
+    rng = np.random.default_rng(seed)
+    weights = np.array([5.0, 3.0, 2.0, 0.05, 0.05, 0.05])[:m]
+    lat = rng.random((n_cfg, 1)) * weights[None, :] + 0.01 * rng.random((n_cfg, m))
+    rec = TaskRecord(task_id="src", queries=[f"q{i}" for i in range(m)])
+    for i in range(n_cfg):
+        rec.observations.append(
+            Observation(config={"x": i}, performance=float(lat[i].sum()), fidelity=1.0,
+                        per_query_perf=list(lat[i]), per_query_cost=list(lat[i]))
+        )
+    return collect_query_stats([rec], {"src": 1.0})
+
+
+def test_greedy_subset_respects_budget_and_correlates():
+    stats = _query_stats()
+    subset, tau, cost = greedy_query_subset(stats, delta=1 / 3)
+    assert cost <= 1 / 3 + 1e-9
+    assert subset and tau > 0.8
+    # selection beats the early-stop prefix of the same size
+    es = early_stop_subset(6, 1 / 3)
+    assert subset_correlation(stats, subset) >= subset_correlation(stats, es) - 1e-9
+
+
+def test_hb_schedule_r9():
+    brackets = hb_schedule(R=9, eta=3)
+    deltas = sorted({round(r.delta, 4) for b in brackets for r in b.rungs})
+    assert deltas == [round(1 / 9, 4), round(1 / 3, 4), 1.0]
+
+
+def test_hyperband_bracket_promotes_best():
+    hb = HyperbandRunner(R=9, eta=3, seed=0)
+    bracket = hb.brackets[0]
+    evals = []
+
+    def provide(n, rungs):
+        return [{"id": i} for i in range(n)]
+
+    def evaluate(cfg, delta, cap):
+        evals.append((cfg["id"], delta))
+        return float(cfg["id"]), False, 1.0  # lower id = better
+
+    hb.run_bracket(bracket, provide, evaluate, lambda *a: None, lambda: False)
+    full = [i for i, d in evals if d >= 1.0]
+    assert full and all(i < 3 for i in full)  # only best configs reach full fidelity
+
+
+def test_median_early_stop_cap():
+    hb = HyperbandRunner(R=9, eta=3, early_stop_factor=1.0)
+    d = round(1 / 9, 6)
+    hb._cost_history[d] = [10.0, 10.0, 10.0]
+    assert hb._cost_cap(1 / 9) == pytest.approx(10.0)
+    assert hb._cost_cap(1 / 3) is None  # no history yet
+
+
+def test_two_phase_warmstart():
+    space = _space()
+    f = lambda c: c["x0"]
+    kb_tasks = {"s0": _record("s0", space, f, n=20, seed=0)}
+    weights = TaskWeights(weights={"s0": 1.0}, similarities={"s0": 0.9}, used_meta=False)
+    cfg1 = phase1_config(weights, kb_tasks)
+    best = kb_tasks["s0"].best()
+    assert cfg1 == best.config
+    q = WarmStartQueue()
+    q.rebuild(weights, kb_tasks)
+    got = q.take(3)
+    assert len(got) == 3
+    assert q.take(100) and got[0] != q.take(1)  # no duplicates served

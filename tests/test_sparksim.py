@@ -1,0 +1,90 @@
+"""Spark simulator invariants + the paper's structural phenomena."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kendall_tau
+from repro.sparksim import SCENARIOS, SparkWorkload, spark_space
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return SparkWorkload("tpch", 600, "A")
+
+
+def test_determinism(wl):
+    cfg = wl.default_config()
+    a = wl.evaluate(cfg)
+    b = wl.evaluate(cfg)
+    assert a.per_query_latency == b.per_query_latency
+
+
+def test_sixty_knobs():
+    assert len(spark_space()) == 60
+
+
+def test_executor_sizing_caps(wl):
+    cfg = wl.default_config()
+    # absurd memory request -> cluster caps executor count -> slower
+    small = dict(cfg, **{"spark.executor.instances": 48, "spark.executor.memory": 8})
+    huge = dict(cfg, **{"spark.executor.instances": 48, "spark.executor.memory": 64})
+    rs = wl.evaluate(small)
+    rh = wl.evaluate(huge)
+    assert rh.aggregate > rs.aggregate
+
+
+def test_oom_channel(wl):
+    cfg = dict(wl.default_config())
+    cfg["spark.executor.memory"] = 2
+    cfg["spark.memory.fraction"] = 0.3
+    cfg["spark.sql.shuffle.partitions"] = 20
+    cfg["spark.executor.cores"] = 16
+    res = wl.evaluate(cfg)
+    assert res.failed and res.failure_reason == "oom"
+
+
+def test_cost_cap_early_stop(wl):
+    cfg = wl.default_config()
+    full = wl.evaluate(cfg)
+    res = wl.evaluate(cfg, cost_cap=full.aggregate / 10)
+    assert res.failed and res.failure_reason == "early_stop"
+    assert res.elapsed <= full.aggregate / 10 + 1e-6
+
+
+def test_meta_features_34d(wl):
+    mf = wl.meta_features()
+    assert len(mf) == 34 and all(np.isfinite(mf))
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=5, deadline=None)
+def test_latency_positive(seed):
+    wl = SparkWorkload("tpch", 100, "B")
+    rng = np.random.default_rng(seed)
+    for cfg in wl.space.sample(rng, 3):
+        res = wl.evaluate(cfg)
+        assert all(l > 0 for l in res.per_query_latency)
+
+
+def test_data_volume_proxy_decorrelates(wl):
+    """Fig. 1b structure: tiny data fractions must rank configs worse than
+    the full-data ranking ranks itself (tau(DV 4%) substantially < 1)."""
+    rng = np.random.default_rng(0)
+    cfgs = [c for c in wl.space.sample(rng, 30)]
+    full, tiny = [], []
+    for c in cfgs:
+        rf = wl.evaluate(c)
+        rt = wl.evaluate(c, data_fraction=1 / 27)
+        if not rf.failed and not rt.failed:
+            full.append(rf.aggregate)
+            tiny.append(rt.aggregate)
+    tau, _ = kendall_tau(tiny, full)
+    assert tau < 0.75  # materially degraded ranking
+
+
+def test_hardware_scenarios_differ(wl):
+    cfg = wl.default_config()
+    a = SparkWorkload("tpch", 600, "A").evaluate(cfg).aggregate
+    f = SparkWorkload("tpch", 600, "F").evaluate(cfg).aggregate
+    assert f > a  # scenario F (2 nodes, 32 cores, 128GB) is strictly smaller

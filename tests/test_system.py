@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests for the paper's system (MFTune on sparksim)."""
+
+import numpy as np
+import pytest
+
+from repro.core import KnowledgeBase, MFTune, MFTuneOptions
+from repro.sparksim import SparkWorkload, TaskSpec, generate_history
+from repro.tuneapi import Budget
+
+
+@pytest.fixture(scope="module")
+def mini_kb():
+    kb = KnowledgeBase()
+    for i, spec in enumerate([TaskSpec("tpch", 600, "B"), TaskSpec("tpch", 100, "A")]):
+        kb.add_task(generate_history(spec.workload(), n_obs=16, n_init=6, seed=i), persist=False)
+    return kb
+
+
+def _run(kb, hours=24, **opts):
+    wl = SparkWorkload("tpch", 600, "A")
+    tuner = MFTune(wl, kb, MFTuneOptions(seed=0, **opts))
+    return tuner.run(Budget(hours * 3600.0))
+
+
+def test_mftune_end_to_end(mini_kb):
+    res = _run(mini_kb)
+    assert res.best_config is not None
+    assert np.isfinite(res.best_performance)
+    assert res.n_evaluations > res.n_full_evaluations  # low-fidelity evals happened
+    assert res.mfo_activation_time is not None
+    # beats the default configuration comfortably
+    wl = SparkWorkload("tpch", 600, "A")
+    default = wl.evaluate(wl.default_config()).aggregate
+    assert res.best_performance < default
+
+
+def test_mftune_multifidelity_explores_more(mini_kb):
+    mf = _run(mini_kb, hours=24)
+    sf = _run(mini_kb, hours=24, enable_mfo=False)
+    # the Fig. 1a phenomenon: MFO evaluates more configurations in-budget
+    assert mf.n_evaluations > sf.n_evaluations
+    assert sf.n_evaluations == sf.n_full_evaluations
+
+
+def test_cold_start_degrades_to_bo_then_activates():
+    res = _run(KnowledgeBase(), hours=48)
+    assert res.best_config is not None
+    # no history: MFO can only activate after enough own observations
+    assert res.mfo_activation_time is None or res.mfo_activation_time > 0
+
+
+def test_trajectory_monotone(mini_kb):
+    res = _run(mini_kb)
+    bests = [p.best for p in res.trajectory]
+    assert all(b2 <= b1 + 1e-9 for b1, b2 in zip(bests, bests[1:]))
+
+
+def test_budget_respected(mini_kb):
+    wl = SparkWorkload("tpch", 600, "A")
+    budget = Budget(12 * 3600.0)
+    MFTune(wl, mini_kb, MFTuneOptions(seed=1)).run(budget)
+    # the final evaluation may overshoot by at most one evaluation's cost
+    assert budget.spent < budget.total * 1.5
