@@ -1,0 +1,65 @@
+"""Scalar vs batched evaluation throughput (configs/sec).
+
+The MFTune bottleneck the batched engine attacks: a Hyperband rung scoring
+32 candidate configs over the 99-query TPC-DS workload. Reports configs/sec
+for the scalar `SparkCostModel.evaluate` loop and the vectorized
+`evaluate_batch` grid, plus the speedup; the cached JSON under
+results/bench/ is the baseline later PRs track.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import cached
+
+N_CONFIGS = 32
+REPEATS = 5
+
+
+def _throughput(fn, n_configs: int, repeats: int) -> float:
+    fn()  # warm up (hash prefixes, numpy dispatch)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return n_configs / best
+
+
+def _run():
+    from repro.sparksim import SparkWorkload
+
+    wl = SparkWorkload("tpcds", 600, "A")
+    rng = np.random.default_rng(0)
+    cfgs = [dict(wl.space.default(), **c) for c in wl.space.sample(rng, N_CONFIGS)]
+    subset = list(rng.choice(len(wl.queries), size=33, replace=False))
+
+    rows = []
+    for name, kwargs in [("full_99q", {}), ("subset_33q", {"query_indices": subset})]:
+        scalar = _throughput(
+            lambda: [wl.model.evaluate(c, **kwargs) for c in cfgs], N_CONFIGS, REPEATS
+        )
+        batch = _throughput(
+            lambda: wl.model.evaluate_batch(cfgs, **kwargs), N_CONFIGS, REPEATS
+        )
+        rows.append({
+            "name": f"scalar_{name}", "us_per_call": 1e6 / scalar,
+            "derived": f"{scalar:.0f} configs/s",
+        })
+        rows.append({
+            "name": f"batch_{name}", "us_per_call": 1e6 / batch,
+            "derived": f"{batch:.0f} configs/s; speedup {batch / scalar:.1f}x",
+        })
+    return rows
+
+
+def run(force: bool = False):
+    return cached("batch_eval", force, _run)
+
+
+if __name__ == "__main__":
+    for r in run(force=True):
+        print(r)

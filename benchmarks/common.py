@@ -17,12 +17,15 @@ import numpy as np
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CACHE = os.path.join(REPO, "results", "bench")
-KB_ROOT = os.path.join(REPO, ".cache", "sparksim_kb")
+# _v2: the sparksim noise derivation changed (hash Box-Muller instead of
+# per-cell default_rng), so histories generated before that are not
+# comparable with new evaluations and must not be reused
+KB_ROOT = os.path.join(REPO, ".cache", "sparksim_kb_v2")
 
 os.makedirs(CACHE, exist_ok=True)
 
 
-CHEAP = {"hb_schedule", "roofline"}
+CHEAP = {"hb_schedule", "roofline", "batch_eval"}
 
 
 def cached(name: str, force: bool, fn: Callable[[], List[dict]]) -> List[dict]:

@@ -24,6 +24,7 @@ BENCHES = [
     ("warmstart", "bench_warmstart"),                   # Table 3
     ("overhead", "bench_overhead"),                     # §7.4.4
     ("roofline", "bench_roofline"),                     # §Roofline (ours)
+    ("batch_eval", "bench_batch_eval"),                 # batched engine (ours)
 ]
 
 

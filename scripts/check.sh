@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Pre-PR gate: tier-1 fast suite + batched-vs-scalar equivalence tests.
+#
+#   scripts/check.sh          # tier-1 (-m "not slow" via pytest.ini) + equivalence
+#   scripts/check.sh --slow   # additionally run the slow tier (system/model tests)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== batched == scalar equivalence gate =="
+python -m pytest -x -q tests/test_batch_eval.py
+
+echo "== tier-1: pytest -x -q (rest of the fast suite) =="
+python -m pytest -x -q --ignore=tests/test_batch_eval.py
+
+if [[ "${1:-}" == "--slow" ]]; then
+  echo "== slow tier =="
+  python -m pytest -q -m slow
+fi
+echo "OK"

@@ -82,6 +82,17 @@ class HyperbandRunner:
     on_result(config, delta, performance, failed, elapsed) -> None
         observation hook (knowledge base updates).
     should_stop() -> bool  budget check between evaluations.
+
+    Batched rungs: pass ``evaluate_batch(configs, delta, cost_cap) ->
+    list[(performance, failed, elapsed)]`` to ``run_bracket`` and every rung
+    evaluates all of its survivors in one call (the vectorized
+    ``Workload.evaluate_many`` path). The median-cost cap is computed once
+    from the history at rung start and applied to the whole rung (the
+    scalar path refreshes it per config — the only semantic difference);
+    per-config cost history, on_result hooks and promotion are unchanged.
+    The callback may return fewer results than configs (a prefix) when the
+    caller's budget runs out mid-rung, mirroring the scalar path's
+    between-config should_stop checks.
     """
 
     def __init__(
@@ -117,6 +128,9 @@ class HyperbandRunner:
         evaluate: Callable[[dict, float, Optional[float]], Tuple[float, bool, float]],
         on_result: Callable[[dict, float, float, bool, float], None],
         should_stop: Callable[[], bool],
+        evaluate_batch: Optional[
+            Callable[[List[dict], float, Optional[float]], List[Tuple[float, bool, float]]]
+        ] = None,
     ) -> List[EvalOutcome]:
         """Run one SH inner loop; returns outcomes of the final rung."""
         rungs = bracket.rungs
@@ -127,14 +141,24 @@ class HyperbandRunner:
             if should_stop():
                 break
             results: List[EvalOutcome] = []
-            for cfg in survivors[: rung.n]:
-                if should_stop():
-                    break
+            if evaluate_batch is not None:
+                batch = survivors[: rung.n]
                 cap = self._cost_cap(rung.delta)
-                perf, failed, elapsed = evaluate(cfg, rung.delta, cap)
-                self._cost_history.setdefault(round(rung.delta, 6), []).append(elapsed)
-                on_result(cfg, rung.delta, perf, failed, elapsed)
-                results.append(EvalOutcome(cfg, perf, failed, elapsed))
+                for cfg, (perf, failed, elapsed) in zip(
+                    batch, evaluate_batch(batch, rung.delta, cap)
+                ):
+                    self._cost_history.setdefault(round(rung.delta, 6), []).append(elapsed)
+                    on_result(cfg, rung.delta, perf, failed, elapsed)
+                    results.append(EvalOutcome(cfg, perf, failed, elapsed))
+            else:
+                for cfg in survivors[: rung.n]:
+                    if should_stop():
+                        break
+                    cap = self._cost_cap(rung.delta)
+                    perf, failed, elapsed = evaluate(cfg, rung.delta, cap)
+                    self._cost_history.setdefault(round(rung.delta, 6), []).append(elapsed)
+                    on_result(cfg, rung.delta, perf, failed, elapsed)
+                    results.append(EvalOutcome(cfg, perf, failed, elapsed))
             ok = [r for r in results if not r.failed]
             ok.sort(key=lambda r: r.performance)
             if rung_i + 1 < len(rungs):

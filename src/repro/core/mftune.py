@@ -6,7 +6,9 @@ Per-iteration workflow (Fig. 2):
   (2) density-based search-space compression from similar-task observations,
   (3) candidate generation = two-phase warm start + combined-rank BO,
   (4) multi-fidelity evaluation via Hyperband successive halving over
-      query-subset proxies (Alg. 2), with median-cost early stopping,
+      query-subset proxies (Alg. 2), with median-cost early stopping —
+      each rung's survivors are evaluated in one batched
+      ``Workload.evaluate_many`` call (the vectorized sparksim grid path),
   (5) results recorded into the knowledge base.
 
 Degradation paths (§6.3): with no same-query-set history, run full-fidelity
@@ -135,11 +137,8 @@ class MFTune:
         return best.config, best.performance
 
     # -------------------------------------------------------------- evaluate
-    def _evaluate(
-        self, budget: Budget, config: Config, delta: float, cost_cap: Optional[float]
-    ) -> Tuple[float, bool, float]:
-        """Evaluate config at fidelity delta; record observation; charge budget."""
-        config = dict(self.space.default(), **config)
+    def _fidelity_params(self, delta: float) -> Tuple[Optional[List[int]], float]:
+        """Map a fidelity delta to (query subset, data fraction)."""
         subset: Optional[List[int]] = None
         data_fraction = 1.0
         m = len(self.wl.queries)
@@ -155,15 +154,23 @@ class MFTune:
                 data_fraction = delta
             else:
                 raise ValueError(mode)
-        res = self.wl.evaluate(
-            config, query_indices=subset, cost_cap=cost_cap, data_fraction=data_fraction
-        )
+        return subset, data_fraction
+
+    def _record(
+        self,
+        budget: Budget,
+        config: Config,
+        delta: float,
+        subset: Optional[List[int]],
+        res: EvalResult,
+    ) -> Tuple[float, bool, float]:
+        """Charge the budget and record one evaluation result."""
         budget.charge(res.elapsed, label=f"eval@{delta:.3f}")
         self._n_eval += 1
         perf = res.aggregate if not res.failed else float("inf")
         obs = Observation(
             config=config,
-            performance=res.aggregate if not res.failed else float("inf"),
+            performance=perf,
             fidelity=delta,
             per_query_perf=list(res.per_query_latency) if delta >= 1.0 and not res.failed else None,
             per_query_cost=list(res.per_query_cost) if delta >= 1.0 and not res.failed else None,
@@ -182,6 +189,39 @@ class MFTune:
                         TrajectoryPoint(time=budget.now, best=res.aggregate, config=config, fidelity=1.0)
                     )
         return perf, res.failed, res.elapsed
+
+    def _evaluate(
+        self, budget: Budget, config: Config, delta: float, cost_cap: Optional[float]
+    ) -> Tuple[float, bool, float]:
+        """Evaluate config at fidelity delta; record observation; charge budget."""
+        config = dict(self.space.default(), **config)
+        subset, data_fraction = self._fidelity_params(delta)
+        res = self.wl.evaluate(
+            config, query_indices=subset, cost_cap=cost_cap, data_fraction=data_fraction
+        )
+        return self._record(budget, config, delta, subset, res)
+
+    def _evaluate_many(
+        self, budget: Budget, configs: List[Config], delta: float, cost_cap: Optional[float]
+    ) -> List[Tuple[float, bool, float]]:
+        """Rung-level batched evaluation through ``Workload.evaluate_many``.
+
+        All configs are evaluated in one workload call; budget charging and
+        observation recording then replay sequentially, and configs past the
+        point of budget exhaustion are dropped (a result prefix), matching
+        the scalar rung loop's between-config should_stop checks.
+        """
+        configs = [dict(self.space.default(), **c) for c in configs]
+        subset, data_fraction = self._fidelity_params(delta)
+        results = self.wl.evaluate_many(
+            configs, query_indices=subset, cost_cap=cost_cap, data_fraction=data_fraction
+        )
+        out: List[Tuple[float, bool, float]] = []
+        for config, res in zip(configs, results):
+            if budget.exhausted:
+                break
+            out.append(self._record(budget, config, delta, subset, res))
+        return out
 
     # ----------------------------------------------------------- components
     def _weights(self) -> TaskWeights:
@@ -329,8 +369,11 @@ class MFTune:
         def evaluate(cfg: Config, delta: float, cap: Optional[float]):
             return self._evaluate(budget, cfg, delta, cap)
 
+        def evaluate_batch(cfgs: List[Config], delta: float, cap: Optional[float]):
+            return self._evaluate_many(budget, cfgs, delta, cap)
+
         def on_result(cfg, delta, perf, failed, elapsed):
-            pass  # recording happens inside _evaluate
+            pass  # recording happens inside _evaluate / _evaluate_many
 
         self.hb.run_bracket(
             bracket,
@@ -338,4 +381,5 @@ class MFTune:
             evaluate=evaluate,
             on_result=on_result,
             should_stop=lambda: budget.exhausted,
+            evaluate_batch=evaluate_batch,
         )

@@ -63,9 +63,12 @@ class CellWorkload(Workload):
         return self._space
 
     # ------------------------------------------------------------------ eval
+    @staticmethod
+    def _canon(cfg: Config) -> str:
+        return json.dumps({k: cfg[k] for k in sorted(cfg)}, default=str)
+
     def _key(self, cell: Tuple[str, str], cfg: Config) -> str:
-        canon = json.dumps({k: cfg[k] for k in sorted(cfg)}, default=str)
-        return f"{cell[0]}|{cell[1]}|{'mp' if self.multi_pod else 'sp'}|{canon}"
+        return f"{cell[0]}|{cell[1]}|{'mp' if self.multi_pod else 'sp'}|{self._canon(cfg)}"
 
     def _overrides(self, cfg: Config, shape_kind: str) -> Dict[str, Any]:
         ov = dict(cfg)
@@ -130,6 +133,33 @@ class CellWorkload(Workload):
             lats.append(t)
             total += t
         return EvalResult(per_query_latency=lats, per_query_cost=list(lats))
+
+    def evaluate_many(
+        self,
+        configs: Sequence[Config],
+        query_indices: Optional[Sequence[int]] = None,
+        cost_cap=None,
+        data_fraction: float = 1.0,
+    ) -> List[EvalResult]:
+        """Batched evaluation for compiled cells.
+
+        A rung batch reduces to one compile per unique (config, cap) pair:
+        duplicates share the first pair's EvalResult outright, and distinct
+        configs go through the scalar path, whose (cell, canonical-config)
+        cache memoizes the compile itself.
+        """
+        caps = self._per_config_caps(cost_cap, len(configs))
+        memo: Dict[Tuple[str, Optional[float]], EvalResult] = {}
+        out: List[EvalResult] = []
+        for cfg, cap in zip(configs, caps):
+            key = (self._canon(dict(self._space.default(), **cfg)), cap)
+            if key not in memo:
+                memo[key] = self.evaluate(
+                    cfg, query_indices=query_indices, cost_cap=cap,
+                    data_fraction=data_fraction,
+                )
+            out.append(memo[key])
+        return out
 
     def meta_features(self) -> Optional[List[float]]:
         return None

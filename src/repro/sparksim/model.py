@@ -19,13 +19,27 @@ so the paper's *phenomena* hold structurally:
 
 All stochasticity is multiplicative lognormal noise seeded per
 (task, config, query): repeated evaluation of a config is deterministic.
+The lognormal draw is derived from a blake2b hash of the cell identity via
+Box-Muller (no per-cell ``np.random.Generator`` construction), so the same
+formula evaluates one cell or a whole (configs x queries) grid.
+
+Two evaluation paths share the model:
+
+- ``evaluate``        — the reference scalar path: queries walked in order,
+  one ``query_latency`` call per query.
+- ``evaluate_batch``  — the vectorized engine: per-query profile arrays are
+  precomputed at construction, per-config scalars are extracted once per
+  config, and the full (configs x queries) latency grid is produced with
+  NumPy broadcasting. Early-stop / OOM masking is applied per config after
+  the grid, reproducing ``evaluate``'s sequential semantics (latencies,
+  costs, failure flags and early-stop charging) bit-for-bit.
 """
 
 from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -144,6 +158,18 @@ class SparkCostModel:
         self.noise = noise
         n_queries = {"tpch": 22, "tpcds": 99}[benchmark]
         self.profiles = make_query_profiles(benchmark, n_queries, seed=seed)
+        # per-query profile arrays, precomputed once for the batched engine
+        self._q = {
+            name: np.array([getattr(p, name) for p in self.profiles])
+            for name in (
+                "scan_frac", "shuffle_frac", "cpu_per_gb", "mem_per_gb", "skew",
+                "small_table_mb", "broadcast_benefit", "oom_resilience",
+                "gc_sensitivity",
+            )
+        }
+        self._q["parallelism_ceiling"] = np.array(
+            [p.parallelism_ceiling for p in self.profiles], dtype=np.int64
+        )
 
     # ------------------------------------------------------------ resources
     def _executors(self, cfg: Config) -> Tuple[int, int, float]:
@@ -284,10 +310,30 @@ class SparkCostModel:
         return f
 
     # ------------------------------------------------------------- noise
+    def _cell_seeds(self, cfg_key: str, query_indices: Sequence[int]) -> np.ndarray:
+        """64-bit hash per (config, query) cell, one prefix hash per config."""
+        prefix = hashlib.blake2b(digest_size=8)
+        prefix.update(
+            "|".join([self.benchmark, str(self.data_gb), self.hw.name, cfg_key, ""]).encode()
+        )
+        seeds = np.empty(len(query_indices), dtype=np.uint64)
+        for i, qi in enumerate(query_indices):
+            h = prefix.copy()
+            h.update(str(qi).encode())
+            seeds[i] = int.from_bytes(h.digest(), "little")
+        return seeds
+
+    def _lognormal_from_seeds(self, seeds: np.ndarray) -> np.ndarray:
+        """Multiplicative lognormal noise from 64-bit seeds via Box-Muller."""
+        hi = (seeds >> np.uint64(32)).astype(np.float64)
+        lo = (seeds & np.uint64(0xFFFFFFFF)).astype(np.float64)
+        u1 = (hi + 0.5) / 2**32
+        u2 = (lo + 0.5) / 2**32
+        z = np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)
+        return np.exp(self.noise * z)
+
     def _noise(self, cfg_key: str, qi: int) -> float:
-        u = _stable_u32(self.benchmark, str(self.data_gb), self.hw.name, cfg_key, str(qi))
-        rng = np.random.default_rng(u)
-        return float(rng.lognormal(0.0, self.noise))
+        return float(self._lognormal_from_seeds(self._cell_seeds(cfg_key, [qi]))[0])
 
     def evaluate(
         self,
@@ -298,7 +344,7 @@ class SparkCostModel:
     ) -> Tuple[List[float], List[float], bool, str]:
         """Run queries in order. Returns (latencies, costs, failed, reason)."""
         idx = list(query_indices) if query_indices is not None else list(range(len(self.profiles)))
-        cfg_key = repr(sorted((k, repr(v)) for k, v in cfg.items()))
+        cfg_key = self._cfg_key(cfg)
         lats: List[float] = []
         costs: List[float] = []
         total = 0.0
@@ -316,3 +362,189 @@ class SparkCostModel:
             if failed:
                 return lats, costs, True, "oom"
         return lats, costs, False, ""
+
+    @staticmethod
+    def _cfg_key(cfg: Config) -> str:
+        return repr(sorted((k, repr(v)) for k, v in cfg.items()))
+
+    # ----------------------------------------------------- batched evaluation
+    def _config_scalars(self, cfg: Config) -> Dict[str, float]:
+        """Per-config constants of the latency model (everything that does
+        not depend on the query), with the same expressions as
+        ``query_latency`` so the batched grid matches it bit-for-bit."""
+        E, slots, task_mem = self._executors(cfg)
+        codec_ratio, codec_cpu = CODEC[cfg["spark.io.compression.codec"]]
+        ser_factor = 0.86 if cfg["spark.serializer"] == "kryo" else 1.0
+        if cfg["spark.serializer"] == "kryo" and float(cfg["spark.kryoserializer.buffer.max"]) < 16:
+            ser_factor *= 1.06
+        codegen = 0.93 if cfg.get("spark.sql.codegen.wholeStage", True) else 1.0
+        aqe = bool(cfg["spark.sql.adaptive.enabled"])
+        comp_on = bool(cfg["spark.shuffle.compress"])
+        fetch_eff = 1.0 + 0.04 * np.log2(48.0 / np.clip(float(cfg["spark.reducer.maxSizeInFlight"]), 8, 256))
+        buf_eff = 1.0 + 0.03 * np.log2(64.0 / np.clip(float(cfg["spark.shuffle.file.buffer"]), 16, 1024))
+        return {
+            "slots_i": slots,
+            "task_mem_floor": max(task_mem, 1e-3),
+            "mpb_gb_floor": max(float(cfg["spark.sql.files.maxPartitionBytes"]) / 1024.0, 1e-3),
+            "codec_cpu": codec_cpu,
+            "ser_factor": ser_factor,
+            "codegen": codegen,
+            "gc_pow": (float(cfg["spark.executor.memory"]) / 12.0) ** 1.4,
+            "bcast_thresh": float(cfg["spark.sql.autoBroadcastJoinThreshold"]),
+            "p0": float(cfg["spark.sql.shuffle.partitions"]),
+            "aqe_coalesce": float(aqe and cfg["spark.sql.adaptive.coalescePartitions.enabled"]),
+            "aqe_skew": float(aqe and cfg["spark.sql.adaptive.skewJoin.enabled"]),
+            "wire_factor": codec_ratio if comp_on else 1.0,
+            "comp_cpu": codec_cpu if comp_on else 1.0,
+            "fetch_eff": max(fetch_eff, 0.9),
+            "buf_eff": max(buf_eff, 0.9),
+            "spill_gain": 0.9 * (0.85 if cfg.get("spark.shuffle.spill.compress", True) else 1.0),
+            "speculation": float(bool(cfg["spark.speculation"])),
+            "loc_wait": float(cfg["spark.locality.wait"]),
+            "minor": self._minor_knob_factor(cfg),
+        }
+
+    def _latency_grid(
+        self, cfgs: Sequence[Config], idx: List[int], data_fraction: float
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Noisy latency grid for (configs x queries).
+
+        Returns ``(lat, failed)`` of shape (C, Q): ``lat`` already includes
+        the OOM timeout factor and the deterministic per-cell noise, exactly
+        as the scalar ``evaluate`` path computes per cell.
+        """
+        hw = self.hw
+        C, Q = len(cfgs), len(idx)
+        sc = {k: np.empty(C) for k in (
+            "task_mem_floor", "mpb_gb_floor", "codec_cpu", "ser_factor",
+            "codegen", "gc_pow", "bcast_thresh", "p0", "aqe_coalesce", "aqe_skew",
+            "wire_factor", "comp_cpu", "fetch_eff", "buf_eff", "spill_gain",
+            "speculation", "loc_wait", "minor",
+        )}
+        slots_i = np.empty(C, dtype=np.int64)
+        seeds = np.empty((C, Q), dtype=np.uint64)
+        for ci, cfg in enumerate(cfgs):
+            s = self._config_scalars(cfg)
+            for k in sc:
+                sc[k][ci] = s[k]
+            slots_i[ci] = s["slots_i"]
+            seeds[ci] = self._cell_seeds(self._cfg_key(cfg), idx)
+
+        def col(name):  # (C, 1) view of a per-config scalar
+            return sc[name][:, None]
+
+        q = {k: v[idx] for k, v in self._q.items()}
+        data_gb = self.data_gb * float(np.clip(data_fraction, 1e-3, 1.0))
+        scan_gb = q["scan_frac"] * data_gb                               # (Q,)
+        slots = slots_i[:, None]                                         # (C, 1)
+        eff_slots = np.maximum(
+            np.minimum(slots, q["parallelism_ceiling"][None, :] * hw.nodes), 1
+        )                                                                # (C, Q)
+
+        # ---- scan (operation order mirrors query_latency exactly)
+        map_tasks = np.maximum(np.ceil(scan_gb[None, :] / col("mpb_gb_floor")), 1.0)
+        waves = np.ceil(map_tasks / eff_slots)
+        util = map_tasks / (waves * eff_slots)
+        scan_time = (
+            scan_gb[None, :] / (IO_BW_PER_SLOT * eff_slots * np.maximum(util, 1e-3)) * col("codec_cpu")
+            + map_tasks * TASK_OVERHEAD / np.maximum(slots, 1)
+        )
+
+        # ---- compute
+        gc_factor = 1.0 + (0.05 * q["gc_sensitivity"])[None, :] * col("gc_pow")
+        compute_time = (
+            (q["cpu_per_gb"] * scan_gb)[None, :] / eff_slots
+            * col("ser_factor") * col("codegen") * gc_factor
+        )
+
+        # ---- shuffle
+        shuffle_gb = np.broadcast_to((q["shuffle_frac"] * scan_gb)[None, :], (C, Q))
+        bcast = (q["small_table_mb"][None, :] > 0) & (col("bcast_thresh") >= q["small_table_mb"][None, :])
+        shuffle_gb = np.where(bcast, shuffle_gb * (1.0 - q["broadcast_benefit"])[None, :], shuffle_gb)
+        p = np.broadcast_to(col("p0"), (C, Q))
+        p_target = np.maximum(shuffle_gb / 0.125, eff_slots)
+        p_coalesced = np.where(p > p_target, p, 0.5 * (p + p_target))
+        p = np.where(col("aqe_coalesce") > 0, p_coalesced, p)
+        skew = np.broadcast_to(q["skew"][None, :], (C, Q))
+        skew = np.where(col("aqe_skew") > 0, 1.0 + (skew - 1.0) * 0.35, skew)
+        wire_gb = shuffle_gb * col("wire_factor")
+        net_time = 2.0 * wire_gb / (NET_BW_PER_NODE * hw.nodes)
+        per_part_gb = shuffle_gb * skew / np.maximum(p, 1.0)
+        reduce_waves = np.ceil(p / eff_slots)
+        proc_time = (
+            reduce_waves * per_part_gb / PROC_BW_PER_SLOT * col("comp_cpu")
+            * col("fetch_eff") * col("buf_eff")
+        )
+        sched_time = p * TASK_OVERHEAD / np.maximum(slots, 1)
+
+        # ---- memory pressure: spill & OOM
+        working_gb = per_part_gb * q["mem_per_gb"][None, :]
+        spill_ratio = working_gb / col("task_mem_floor")
+        failed = spill_ratio > q["oom_resilience"][None, :]
+        spill_mult = np.where(
+            spill_ratio > 1.0, 1.0 + col("spill_gain") * (spill_ratio - 1.0), 1.0
+        )
+        shuffle_time = (net_time + proc_time) * spill_mult + sched_time
+
+        # ---- straggler/scheduling extras
+        tail = 1.0 + 0.06 * (skew - 1.0)
+        tail = np.where(col("speculation") > 0, 1.0 + (tail - 1.0) * 0.55, tail)
+        tail = tail + 0.004 * col("loc_wait") * (waves + reduce_waves)
+
+        latency = (scan_time + compute_time + shuffle_time) * tail
+        latency = latency * col("minor")
+        latency = np.where(failed, TIMEOUT_FACTOR * latency, latency)
+        latency = latency * self._lognormal_from_seeds(seeds)
+        return latency, failed
+
+    def evaluate_batch(
+        self,
+        cfgs: Sequence[Config],
+        query_indices: Optional[List[int]] = None,
+        data_fraction: float = 1.0,
+        cost_cap: Union[None, float, Sequence[Optional[float]]] = None,
+    ) -> List[Tuple[List[float], List[float], bool, str]]:
+        """Vectorized ``evaluate`` over many configs at once.
+
+        Computes the full (configs x queries) latency grid with one
+        broadcasted NumPy pass, then applies per-config sequential masking
+        (cost-cap early stop, OOM abort) so each returned tuple matches
+        ``evaluate(cfg, ...)`` bit-for-bit. ``cost_cap`` may be a scalar
+        (same cap for every config) or a per-config sequence.
+        """
+        idx = list(query_indices) if query_indices is not None else list(range(len(self.profiles)))
+        caps: List[Optional[float]]
+        if cost_cap is None or np.isscalar(cost_cap):
+            caps = [cost_cap] * len(cfgs)  # type: ignore[list-item]
+        else:
+            caps = list(cost_cap)
+            if len(caps) != len(cfgs):
+                raise ValueError(f"{len(caps)} cost caps for {len(cfgs)} configs")
+        lat, failed = self._latency_grid(cfgs, idx, data_fraction)
+        out: List[Tuple[List[float], List[float], bool, str]] = []
+        n = len(idx)
+        for ci in range(len(cfgs)):
+            row = lat[ci]
+            # cumulative cost *before* each query, via the same sequential
+            # additions the scalar loop performs (np.cumsum accumulates
+            # left-to-right, so the partial sums are bitwise identical)
+            before = np.concatenate(([0.0], np.cumsum(row)[:-1]))
+            cap = caps[ci]
+            j_es = n
+            if cap is not None:
+                hits = np.nonzero(before + row > cap)[0]
+                if hits.size:
+                    j_es = int(hits[0])
+            ooms = np.nonzero(failed[ci])[0]
+            j_oom = int(ooms[0]) if ooms.size else n
+            if j_es <= j_oom and j_es < n:
+                lats = [float(x) for x in row[: j_es + 1]]
+                costs = [float(x) for x in row[:j_es]] + [max(float(cap) - float(before[j_es]), 0.0)]
+                out.append((lats, costs, True, "early_stop"))
+            elif j_oom < n:
+                lats = [float(x) for x in row[: j_oom + 1]]
+                out.append((lats, list(lats), True, "oom"))
+            else:
+                lats = [float(x) for x in row]
+                out.append((lats, list(lats), False, ""))
+        return out

@@ -1,10 +1,16 @@
 """SparkWorkload: the Workload-protocol adapter over the cost model,
 including SparkEventLog-style 34-d meta-feature extraction (paper §4.2).
+
+``evaluate`` runs one config through the scalar reference path;
+``evaluate_many`` routes a whole batch of configs through the vectorized
+``SparkCostModel.evaluate_batch`` grid engine (bit-for-bit equivalent to a
+loop over ``evaluate``, but one NumPy pass over all configs x queries) —
+this is the path Hyperband rungs use.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -63,6 +69,28 @@ class SparkWorkload(Workload):
         return EvalResult(
             per_query_latency=lats, per_query_cost=costs, failed=failed, failure_reason=reason
         )
+
+    def evaluate_many(
+        self,
+        configs: Sequence[Config],
+        query_indices: Optional[Sequence[int]] = None,
+        cost_cap: Union[None, float, Sequence[Optional[float]]] = None,
+        data_fraction: float = 1.0,
+    ) -> List[EvalResult]:
+        """Batched evaluation via the vectorized cost-model grid."""
+        caps = self._per_config_caps(cost_cap, len(configs))
+        cfgs = [dict(self._space.default(), **c) for c in configs]
+        rows = self.model.evaluate_batch(
+            cfgs,
+            query_indices=list(query_indices) if query_indices is not None else None,
+            data_fraction=data_fraction,
+            cost_cap=caps,
+        )
+        return [
+            EvalResult(per_query_latency=lats, per_query_cost=costs,
+                       failed=failed, failure_reason=reason)
+            for lats, costs, failed, reason in rows
+        ]
 
     # ----------------------------------------------------------- meta features
     def meta_features(self) -> List[float]:

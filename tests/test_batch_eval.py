@@ -1,0 +1,185 @@
+"""Batched-vs-scalar evaluation equivalence.
+
+The vectorized engine (`SparkCostModel.evaluate_batch`,
+`Workload.evaluate_many`, Hyperband's rung-level batched path) must
+reproduce the scalar reference paths bit-for-bit: latencies, costs,
+failure flags/reasons, early-stop charging and noise determinism.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import HyperbandRunner
+from repro.sparksim import SparkWorkload
+from repro.tuneapi import EvalResult, Workload
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return SparkWorkload("tpch", 600, "A")
+
+
+def _configs(wl, n, seed):
+    rng = np.random.default_rng(seed)
+    return [dict(wl.space.default(), **c) for c in wl.space.sample(rng, n)]
+
+
+def _assert_rows_equal(ref, row):
+    lats, costs, failed, reason = row
+    assert [float(x) for x in ref[0]] == lats
+    assert [float(x) for x in ref[1]] == costs
+    assert ref[2] == failed and ref[3] == reason
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batch_matches_scalar_full_set(wl, seed):
+    cfgs = _configs(wl, 8, seed)
+    rows = wl.model.evaluate_batch(cfgs)
+    for cfg, row in zip(cfgs, rows):
+        _assert_rows_equal(wl.model.evaluate(cfg), row)
+
+
+@pytest.mark.parametrize("data_fraction", [1.0, 1 / 3, 1 / 27])
+def test_batch_matches_scalar_subsets_and_fractions(wl, data_fraction):
+    rng = np.random.default_rng(7)
+    cfgs = _configs(wl, 6, 7)
+    subset = list(rng.choice(len(wl.queries), size=9, replace=False))
+    rows = wl.model.evaluate_batch(cfgs, query_indices=subset, data_fraction=data_fraction)
+    for cfg, row in zip(cfgs, rows):
+        _assert_rows_equal(
+            wl.model.evaluate(cfg, query_indices=subset, data_fraction=data_fraction), row
+        )
+
+
+def test_batch_matches_scalar_cost_caps(wl):
+    """Early-stop charging (and its precedence over OOM) is identical."""
+    cfgs = _configs(wl, 10, 11)
+    full = [wl.model.evaluate(c)[0] for c in cfgs]
+    # caps chosen to trigger early stops at different depths per config
+    caps = [sum(lats) * f for lats, f in zip(full, [0.05, 0.3, 0.9, 1.1, 0.5,
+                                                    0.01, 0.7, 2.0, 0.2, 0.6])]
+    rows = wl.model.evaluate_batch(cfgs, cost_cap=caps)
+    n_early = 0
+    for cfg, cap, row in zip(cfgs, caps, rows):
+        ref = wl.model.evaluate(cfg, cost_cap=cap)
+        _assert_rows_equal(ref, row)
+        n_early += row[3] == "early_stop"
+    assert n_early >= 5  # the caps actually exercised the early-stop branch
+    # one shared scalar cap behaves like a per-config broadcast of it
+    rows_scalar_cap = wl.model.evaluate_batch(cfgs, cost_cap=caps[0])
+    _assert_rows_equal(wl.model.evaluate(cfgs[1], cost_cap=caps[0]), rows_scalar_cap[1])
+
+
+def test_batch_reproduces_oom(wl):
+    bad = dict(wl.default_config())
+    bad.update({"spark.executor.memory": 2, "spark.memory.fraction": 0.3,
+                "spark.sql.shuffle.partitions": 20, "spark.executor.cores": 16})
+    bad = dict(wl.space.default(), **bad)
+    good = dict(wl.space.default(), **wl.default_config())
+    rows = wl.model.evaluate_batch([good, bad])
+    _assert_rows_equal(wl.model.evaluate(good), rows[0])
+    _assert_rows_equal(wl.model.evaluate(bad), rows[1])
+    assert rows[1][2] and rows[1][3] == "oom"
+    assert len(rows[1][0]) < len(wl.queries)  # aborted at the failing query
+
+
+def test_batch_deterministic(wl):
+    cfgs = _configs(wl, 4, 3)
+    a = wl.model.evaluate_batch(cfgs)
+    b = wl.model.evaluate_batch(cfgs)
+    assert a == b
+
+
+def test_workload_evaluate_many_matches_evaluate(wl):
+    rng = np.random.default_rng(5)
+    cfgs = [c for c in wl.space.sample(rng, 5)]  # partial configs: defaults merged inside
+    subset = [0, 3, 7, 12]
+    many = wl.evaluate_many(cfgs, query_indices=subset, cost_cap=40.0, data_fraction=0.5)
+    for cfg, res in zip(cfgs, many):
+        ref = wl.evaluate(cfg, query_indices=subset, cost_cap=40.0, data_fraction=0.5)
+        assert [float(x) for x in ref.per_query_latency] == res.per_query_latency
+        assert [float(x) for x in ref.per_query_cost] == res.per_query_cost
+        assert ref.failed == res.failed and ref.failure_reason == res.failure_reason
+
+
+class _LoopWorkload(Workload):
+    """Protocol-only workload: exercises the default evaluate_many fallback."""
+
+    task_id = "loop"
+
+    def __init__(self):
+        self.calls = []
+
+    @property
+    def queries(self):
+        return ["q1", "q2"]
+
+    def evaluate(self, config, query_indices=None, cost_cap=None, data_fraction=1.0):
+        self.calls.append((config["x"], cost_cap))
+        return EvalResult(per_query_latency=[float(config["x"])], per_query_cost=[1.0])
+
+
+def test_default_evaluate_many_loops_with_per_config_caps():
+    w = _LoopWorkload()
+    res = w.evaluate_many([{"x": 1}, {"x": 2}], cost_cap=[5.0, None])
+    assert [r.per_query_latency for r in res] == [[1.0], [2.0]]
+    assert w.calls == [(1, 5.0), (2, None)]
+    with pytest.raises(ValueError):
+        w.evaluate_many([{"x": 1}], cost_cap=[1.0, 2.0])
+
+
+def _toy_eval(cfg, delta, cap):
+    # deterministic, lower id better; elapsed constant so the median cap
+    # history is identical between the scalar and batched paths
+    return float(cfg["id"]) + delta, cfg["id"] == 7, 1.0
+
+
+def test_hyperband_batched_rungs_match_scalar():
+    log_s, log_b = [], []
+
+    def run(use_batch, log):
+        hb = HyperbandRunner(R=9, eta=3, seed=0)
+        kwargs = {}
+        if use_batch:
+            kwargs["evaluate_batch"] = lambda cfgs, delta, cap: [
+                _toy_eval(c, delta, cap) for c in cfgs
+            ]
+        return hb.run_bracket(
+            hb.brackets[0],
+            provide_candidates=lambda n, rungs: [{"id": i} for i in range(n)],
+            evaluate=lambda cfg, delta, cap: _toy_eval(cfg, delta, cap),
+            on_result=lambda cfg, delta, perf, failed, elapsed: log.append(
+                (cfg["id"], round(delta, 6), perf, failed)
+            ),
+            should_stop=lambda: False,
+            **kwargs,
+        )
+
+    out_s = run(False, log_s)
+    out_b = run(True, log_b)
+    assert log_s == log_b  # same configs evaluated at the same fidelities
+    assert [(o.config, o.performance, o.failed) for o in out_s] == [
+        (o.config, o.performance, o.failed) for o in out_b
+    ]
+
+
+def test_hyperband_batched_prefix_means_budget_out():
+    """A short batch result (budget ran out) stops the rung like should_stop."""
+    hb = HyperbandRunner(R=9, eta=3, seed=0)
+    seen = []
+
+    def batch(cfgs, delta, cap):
+        out = [(float(c["id"]), False, 1.0) for c in cfgs]
+        return out[:2]  # budget died after two evaluations
+
+    outcomes = hb.run_bracket(
+        hb.brackets[0],
+        provide_candidates=lambda n, rungs: [{"id": i} for i in range(n)],
+        evaluate=lambda cfg, delta, cap: (0.0, False, 1.0),
+        on_result=lambda cfg, delta, perf, failed, elapsed: seen.append(cfg["id"]),
+        should_stop=lambda: False,
+        evaluate_batch=batch,
+    )
+    assert seen[:2] == [0, 1]
+    # survivors of the truncated rung still promote (2 results / eta -> 1)
+    assert all(i in (0, 1) for i in seen[2:])

@@ -1,8 +1,12 @@
-"""ConfigSpace: encode/decode, LHS, restrictions (unit + property tests)."""
+"""ConfigSpace: encode/decode, LHS, restrictions (unit + property tests).
+
+The property tests run as seeded ``pytest.mark.parametrize`` cases so the
+module passes without ``hypothesis`` installed; a fuzz variant widens the
+seed coverage when ``hypothesis`` is available (importorskip-guarded).
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import BoolKnob, CatKnob, ConfigSpace, FloatKnob, IntKnob, Intervals
 
@@ -26,9 +30,7 @@ def test_encode_decode_roundtrip_default():
     assert dec["i"] == cfg["i"]
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_sample_within_bounds(seed):
+def _check_sample_within_bounds(seed):
     s = space()
     rng = np.random.default_rng(seed)
     for cfg in s.sample(rng, 5):
@@ -38,6 +40,20 @@ def test_sample_within_bounds(seed):
         assert cfg["c"] in ("a", "b", "c")
         u = s.encode(cfg)
         assert np.all((u >= 0) & (u <= 1))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 1234, 99991, 2**31 - 1])
+def test_sample_within_bounds(seed):
+    _check_sample_within_bounds(seed)
+
+
+def test_sample_within_bounds_fuzz():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    settings(max_examples=20, deadline=None)(
+        given(st.integers(0, 2**31 - 1))(_check_sample_within_bounds)
+    )()
 
 
 def test_lhs_stratification():

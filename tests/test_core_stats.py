@@ -1,8 +1,12 @@
-"""Surrogates, Shapley, KDE, GBM, acquisition (unit + property tests)."""
+"""Surrogates, Shapley, KDE, GBM, acquisition (unit + property tests).
+
+The property tests run as seeded ``pytest.mark.parametrize`` cases so the
+module passes without ``hypothesis`` installed; a fuzz variant widens the
+seed coverage when ``hypothesis`` is available (importorskip-guarded).
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     GaussianProcess,
@@ -68,9 +72,7 @@ def test_shapley_mc_matches_exact():
     assert abs(mc.sum() - (fx - f0)) < 1e-9
 
 
-@given(st.integers(0, 1000))
-@settings(max_examples=10, deadline=None)
-def test_shapley_additivity_property(seed):
+def _check_shapley_additivity(seed):
     rng = np.random.default_rng(seed)
     d = 6
     A = rng.normal(size=(d, d)) / d
@@ -79,6 +81,20 @@ def test_shapley_additivity_property(seed):
     bg = rng.random((8, d))
     phi = shapley_values(f, x, bg, n_permutations=8, rng=rng)
     assert abs(phi.sum() - (f(x[None])[0] - f(bg).mean())) < 1e-9
+
+
+@pytest.mark.parametrize("seed", [0, 1, 17, 123, 999])
+def test_shapley_additivity_property(seed):
+    _check_shapley_additivity(seed)
+
+
+def test_shapley_additivity_fuzz():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    settings(max_examples=10, deadline=None)(
+        given(st.integers(0, 1000))(_check_shapley_additivity)
+    )()
 
 
 def test_alpha_mass_region_bimodal():

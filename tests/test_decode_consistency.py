@@ -12,7 +12,11 @@ from repro.models import Runtime, build_param_specs, decode_step, forward, init_
 
 RT = Runtime(scan_layers=True, remat="none", attn_chunk=16, act_shard=False)
 
-CASES = ["llama3-8b", "rwkv6-7b", "zamba2-2.7b", "deepseek-v3-671b", "mixtral-8x22b"]
+SLOW_CASES = {"zamba2-2.7b", "deepseek-v3-671b"}
+CASES = [
+    pytest.param(n, marks=pytest.mark.slow) if n in SLOW_CASES else n
+    for n in ["llama3-8b", "rwkv6-7b", "zamba2-2.7b", "deepseek-v3-671b", "mixtral-8x22b"]
+]
 
 
 @pytest.mark.parametrize("name", CASES)

@@ -18,7 +18,10 @@ def _mesh(shape, axes):
     total = int(np.prod(shape))
     if N_DEV < total:
         pytest.skip(f"needs {total} devices, have {N_DEV}")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):  # explicit-sharding API, jax >= 0.5
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kwargs)
 
 
 # ------------------------------------------------------------------ sharding
@@ -129,6 +132,7 @@ def test_checkpoint_roundtrip(tmp_path):
     assert extra["step"] == 30
 
 
+@pytest.mark.slow
 def test_trainer_resume_exact(tmp_path):
     from repro.configs import get_arch, reduced
     from repro.models import Runtime

@@ -13,7 +13,14 @@ def _tol(dt):
     return TOL[dt]
 
 
-@pytest.mark.parametrize("S,Hkv,G,D", [(64, 1, 1, 16), (128, 2, 2, 32), (64, 2, 4, 64)])
+slow = pytest.mark.slow  # larger shapes ride in the slow tier (compile time)
+
+
+@pytest.mark.parametrize("S,Hkv,G,D", [
+    (64, 1, 1, 16),
+    pytest.param(128, 2, 2, 32, marks=slow),
+    pytest.param(64, 2, 4, 64, marks=slow),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 32)])
 def test_flash_attn_sweep(S, Hkv, G, D, dtype, causal, window):
@@ -46,7 +53,11 @@ def test_flash_attn_grads_match_ref():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5, rtol=1e-4)
 
 
-@pytest.mark.parametrize("S,splits", [(128, 2), (256, 4), (96, 3)])
+@pytest.mark.parametrize("S,splits", [
+    (128, 2),
+    pytest.param(256, 4, marks=slow),
+    pytest.param(96, 3, marks=slow),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_decode_sweep(S, splits, dtype):
     from repro.kernels.flash_decode.ops import decode_attention
@@ -91,7 +102,10 @@ def test_rmsnorm_grad():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)
 
 
-@pytest.mark.parametrize("S,P,N,chunk", [(64, 8, 4, 16), (128, 16, 8, 32)])
+@pytest.mark.parametrize("S,P,N,chunk", [
+    (64, 8, 4, 16),
+    pytest.param(128, 16, 8, 32, marks=slow),
+])
 def test_mamba2_ssd_sweep(S, P, N, chunk):
     from repro.kernels.mamba2_ssd.ops import ssd_scan
     from repro.kernels.mamba2_ssd.ref import ssd_ref
@@ -107,7 +121,10 @@ def test_mamba2_ssd_sweep(S, P, N, chunk):
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref[:, :, 0]), atol=2e-5, rtol=1e-4)
 
 
-@pytest.mark.parametrize("S,K,chunk", [(64, 16, 16), (128, 32, 32)])
+@pytest.mark.parametrize("S,K,chunk", [
+    (64, 16, 16),
+    pytest.param(128, 32, 32, marks=slow),
+])
 def test_rwkv6_wkv_sweep(S, K, chunk):
     from repro.kernels.rwkv6_wkv.ops import wkv_scan
     from repro.kernels.rwkv6_wkv.ref import wkv_ref
@@ -130,7 +147,10 @@ def test_rwkv6_wkv_sweep(S, K, chunk):
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=3e-5, rtol=1e-4)
 
 
-@pytest.mark.parametrize("E,C,D,F", [(2, 32, 48, 24), (4, 64, 96, 48)])
+@pytest.mark.parametrize("E,C,D,F", [
+    (2, 32, 48, 24),
+    pytest.param(4, 64, 96, 48, marks=slow),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_moe_gmm_sweep(E, C, D, F, dtype):
     from repro.kernels.moe_gmm.ops import grouped_matmul

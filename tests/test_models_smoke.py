@@ -21,6 +21,19 @@ RT = Runtime(scan_layers=True, remat="none", attn_chunk=64, act_shard=False)
 B, S = 2, 64
 
 
+def _arch_params(slow_archs):
+    """All archs, the CPU-heavy ones carried in the slow tier."""
+    return [
+        pytest.param(n, marks=pytest.mark.slow) if n in slow_archs else n
+        for n in sorted(ARCHS)
+    ]
+
+
+SLOW_SMOKE = {"zamba2-2.7b", "deepseek-v3-671b", "seamless-m4t-medium",
+              "rwkv6-7b", "mixtral-8x22b"}
+SLOW_TRAIN = SLOW_SMOKE | {"deepseek-coder-33b", "qwen2-vl-72b", "nemotron-4-340b"}
+
+
 def _batch(cfg):
     batch = {
         "tokens": jnp.zeros((B, S), jnp.int32),
@@ -31,7 +44,7 @@ def _batch(cfg):
     return batch
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+@pytest.mark.parametrize("name", _arch_params(SLOW_SMOKE))
 def test_arch_smoke(name):
     cfg = reduced(get_arch(name))
     params = init_params(build_param_specs(cfg, RT), jax.random.PRNGKey(0))
@@ -55,7 +68,7 @@ def test_arch_smoke(name):
     assert int(cache2["pos"][0]) == 1
 
 
-@pytest.mark.parametrize("name", sorted(ARCHS))
+@pytest.mark.parametrize("name", _arch_params(SLOW_TRAIN))
 def test_train_step_reduces_loss(name):
     """A couple of optimizer steps decrease CE on a repeated batch."""
     from repro.train import make_train_step

@@ -1,8 +1,12 @@
-"""Spark simulator invariants + the paper's structural phenomena."""
+"""Spark simulator invariants + the paper's structural phenomena.
+
+The property tests run as seeded ``pytest.mark.parametrize`` cases so the
+module passes without ``hypothesis`` installed; a fuzz variant widens the
+seed coverage when ``hypothesis`` is available (importorskip-guarded).
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import kendall_tau
 from repro.sparksim import SCENARIOS, SparkWorkload, spark_space
@@ -57,14 +61,26 @@ def test_meta_features_34d(wl):
     assert len(mf) == 34 and all(np.isfinite(mf))
 
 
-@given(st.integers(0, 100))
-@settings(max_examples=5, deadline=None)
-def test_latency_positive(seed):
+def _check_latency_positive(seed):
     wl = SparkWorkload("tpch", 100, "B")
     rng = np.random.default_rng(seed)
     for cfg in wl.space.sample(rng, 3):
         res = wl.evaluate(cfg)
         assert all(l > 0 for l in res.per_query_latency)
+
+
+@pytest.mark.parametrize("seed", [0, 37, 100])
+def test_latency_positive(seed):
+    _check_latency_positive(seed)
+
+
+def test_latency_positive_fuzz():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    settings(max_examples=5, deadline=None)(
+        given(st.integers(0, 100))(_check_latency_positive)
+    )()
 
 
 def test_data_volume_proxy_decorrelates(wl):

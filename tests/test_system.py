@@ -34,6 +34,7 @@ def test_mftune_end_to_end(mini_kb):
     assert res.best_performance < default
 
 
+@pytest.mark.slow
 def test_mftune_multifidelity_explores_more(mini_kb):
     mf = _run(mini_kb, hours=24)
     sf = _run(mini_kb, hours=24, enable_mfo=False)
@@ -49,12 +50,14 @@ def test_cold_start_degrades_to_bo_then_activates():
     assert res.mfo_activation_time is None or res.mfo_activation_time > 0
 
 
+@pytest.mark.slow
 def test_trajectory_monotone(mini_kb):
     res = _run(mini_kb)
     bests = [p.best for p in res.trajectory]
     assert all(b2 <= b1 + 1e-9 for b1, b2 in zip(bests, bests[1:]))
 
 
+@pytest.mark.slow
 def test_budget_respected(mini_kb):
     wl = SparkWorkload("tpch", 600, "A")
     budget = Budget(12 * 3600.0)
