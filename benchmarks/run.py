@@ -25,6 +25,7 @@ BENCHES = [
     ("overhead", "bench_overhead"),                     # §7.4.4
     ("roofline", "bench_roofline"),                     # §Roofline (ours)
     ("batch_eval", "bench_batch_eval"),                 # batched engine (ours)
+    ("surrogate", "bench_surrogate"),                   # packed forest plane (ours)
 ]
 
 

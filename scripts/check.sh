@@ -10,11 +10,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== batched == scalar equivalence gate =="
 python -m pytest -x -q tests/test_batch_eval.py
 
+echo "== packed-forest == per-tree-loop equivalence gate =="
+python -m pytest -x -q tests/test_surrogate_packed.py
+
 echo "== tier-1: pytest -x -q (rest of the fast suite) =="
-python -m pytest -x -q --ignore=tests/test_batch_eval.py
+python -m pytest -x -q --ignore=tests/test_batch_eval.py --ignore=tests/test_surrogate_packed.py
 
 if [[ "${1:-}" == "--slow" ]]; then
   echo "== slow tier =="
   python -m pytest -q -m slow
+  echo "== surrogate bench smoke (1 repetition) =="
+  python -m benchmarks.bench_surrogate --smoke
 fi
 echo "OK"

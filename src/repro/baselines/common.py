@@ -17,7 +17,7 @@ from ..core.acquisition import ei_scores
 from ..core.knowledge import KnowledgeBase, Observation, TaskRecord
 from ..core.mftune import TrajectoryPoint, TuningResult
 from ..core.space import ConfigSpace
-from ..core.surrogate import ProbabilisticRandomForest
+from ..core.surrogate import make_forest
 from ..tuneapi import Budget, Workload
 
 Config = Dict[str, Any]
@@ -107,7 +107,7 @@ class BaselineTuner:
             return None
         X = space.encode_many([o.config for o in obs])
         y = np.array([o.performance for o in obs])
-        return ProbabilisticRandomForest(seed=self.seed).fit(X, y)
+        return make_forest(seed=self.seed).fit(X, y)
 
     def ei_pick(self, model, pool: List[Config], space=None) -> Config:
         space = space or self.space

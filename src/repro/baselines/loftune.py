@@ -18,7 +18,7 @@ from typing import List, Optional
 import numpy as np
 
 from ..core.knowledge import KnowledgeBase
-from ..core.surrogate import ProbabilisticRandomForest
+from ..core.surrogate import ProbabilisticRandomForest, make_forest
 from .common import BaselineTuner, Budget, Config
 
 __all__ = ["LOFTune"]
@@ -54,7 +54,7 @@ class LOFTune(BaselineTuner):
                 Xs.append(np.concatenate([self.space.encode(o.config), mf]))
                 ys.append(float(zi))
         if len(ys) >= 10:
-            self._pooled = ProbabilisticRandomForest(seed=self.seed, n_trees=12).fit(
+            self._pooled = make_forest(seed=self.seed, n_trees=12).fit(
                 np.array(Xs), np.array(ys)
             )
 

@@ -14,10 +14,9 @@ from typing import Optional
 
 import numpy as np
 
-from ..core.acquisition import ei_scores, rank_aggregate
+from ..core.acquisition import aggregate_ranks, score_sources
 from ..core.knowledge import KnowledgeBase
 from ..core.similarity import SimilarityEngine
-from ..core.surrogate import ProbabilisticRandomForest
 from .common import BaselineTuner, Budget, Config
 
 __all__ = ["Rover"]
@@ -70,12 +69,10 @@ class Rover(BaselineTuner):
             return pool[0]
         weights = self.sim.compute(self.target)
         X = self.space.encode_many(pool)
-        score_lists, wts = [], []
         # target surrogate always participates
-        model = self.fit_surrogate(ok)
-        best = min(o.performance for o in ok)
-        score_lists.append(ei_scores(model, X, best))
-        wts.append(max(weights.weights.get("__target__", 0.0), 0.25))
+        models = [self.fit_surrogate(ok)]
+        incs = [min(o.performance for o in ok)]
+        wts = [max(weights.weights.get("__target__", 0.0), 0.25)]
         for tid, w in weights.weights.items():
             if tid == "__target__" or w <= 0:
                 continue
@@ -83,8 +80,9 @@ class Rover(BaselineTuner):
             if sm is None:
                 continue
             src_best = self.kb.get(tid).best()
-            inc = src_best.performance if src_best else 0.0
-            score_lists.append(ei_scores(sm, X, inc))
+            models.append(sm)
+            incs.append(src_best.performance if src_best else 0.0)
             wts.append(w)
-        agg = rank_aggregate(score_lists, wts)
+        # one fused pass: shared packed-forest descent + EI matrix + ranks
+        agg = aggregate_ranks(score_sources(models, X, incs), wts)
         return pool[int(np.argmin(agg))]

@@ -69,11 +69,11 @@ class TopTune(BaselineTuner):
             cfg.update(base)
             return cfg
         # continuous phase: BO in the synthetic space
-        from ..core.surrogate import ProbabilisticRandomForest
+        from ..core.surrogate import make_forest
         from ..core.acquisition import ei_scores
 
         if len(self._low_y) >= 2:
-            model = ProbabilisticRandomForest(seed=self.seed).fit(
+            model = make_forest(seed=self.seed).fit(
                 np.array(self._low_obs), np.array(self._low_y)
             )
             pool = self.rng.random((192, self.d_low))

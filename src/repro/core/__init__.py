@@ -12,8 +12,22 @@ Public API:
 """
 
 from .space import BoolKnob, CatKnob, ConfigSpace, FloatKnob, IntKnob, Intervals
-from .surrogate import GaussianProcess, ProbabilisticRandomForest
-from .acquisition import expected_improvement, rank_aggregate
+from .surrogate import (
+    ForestPlane,
+    GaussianProcess,
+    PackedForest,
+    ProbabilisticRandomForest,
+    forest_backend,
+    make_forest,
+    set_forest_backend,
+)
+from .acquisition import (
+    aggregate_ranks,
+    expected_improvement,
+    normal_cdf,
+    rank_aggregate,
+    score_sources,
+)
 from .gbm import GradientBoostedTrees
 from .kde import WeightedKDE, alpha_mass_categories, alpha_mass_region, silverman_bandwidth
 from .shapley import shapley_values, shapley_values_exact
@@ -28,14 +42,15 @@ from .fidelity import (
     partition_fidelities,
     subset_correlation,
 )
-from .generator import CandidateGenerator, WarmStartQueue, phase1_config
+from .generator import CandidateGenerator, SurrogateStore, WarmStartQueue, phase1_config
 from .hyperband import Bracket, HyperbandRunner, Rung, hb_schedule, sh_schedule
 from .mftune import MFTune, MFTuneOptions, TuningResult
 
 __all__ = [
     "BoolKnob", "CatKnob", "ConfigSpace", "FloatKnob", "IntKnob", "Intervals",
     "GaussianProcess", "ProbabilisticRandomForest",
-    "expected_improvement", "rank_aggregate",
+    "PackedForest", "ForestPlane", "make_forest", "set_forest_backend", "forest_backend",
+    "expected_improvement", "rank_aggregate", "aggregate_ranks", "normal_cdf", "score_sources",
     "GradientBoostedTrees",
     "WeightedKDE", "alpha_mass_categories", "alpha_mass_region", "silverman_bandwidth",
     "shapley_values", "shapley_values_exact",
@@ -44,7 +59,7 @@ __all__ = [
     "SpaceCompressor", "compress_space", "extract_promising_regions",
     "FidelityPartition", "collect_query_stats", "early_stop_subset",
     "greedy_query_subset", "partition_fidelities", "subset_correlation",
-    "CandidateGenerator", "WarmStartQueue", "phase1_config",
+    "CandidateGenerator", "SurrogateStore", "WarmStartQueue", "phase1_config",
     "Bracket", "HyperbandRunner", "Rung", "hb_schedule", "sh_schedule",
     "MFTune", "MFTuneOptions", "TuningResult",
 ]

@@ -1,14 +1,48 @@
-"""Acquisition functions and rank aggregation (paper §3.3, §6.2)."""
+"""Acquisition functions and rank aggregation (paper §3.3, §6.2).
+
+The acquisition path is a batched array program end-to-end: the normal CDF
+is a vectorized ufunc (no per-candidate ``np.vectorize(erf)``),
+``score_sources`` computes the EI matrix for *all* surrogate sources in one
+fused pass (PRF sources share a single packed-forest descent via
+``ForestPlane``), and ``aggregate_ranks`` turns an (S, N) score matrix into
+weighted aggregate ranks with one argsort per source row.
+"""
 
 from __future__ import annotations
 
-from typing import Sequence
+import math
+from collections import OrderedDict
+from typing import Sequence, Tuple
 
 import numpy as np
 
-from .surrogate import Surrogate
+from .surrogate import ForestPlane, ProbabilisticRandomForest, Surrogate
 
-__all__ = ["expected_improvement", "ei_scores", "rank_aggregate"]
+try:
+    from scipy.special import ndtr as _ndtr
+except ImportError:  # pragma: no cover - scipy ships with the image
+    _ndtr = None
+
+__all__ = [
+    "normal_cdf",
+    "expected_improvement",
+    "ei_matrix",
+    "ei_scores",
+    "predict_sources",
+    "score_sources",
+    "aggregate_ranks",
+    "rank_aggregate",
+]
+
+_SQRT2 = math.sqrt(2.0)
+
+
+def normal_cdf(z: np.ndarray) -> np.ndarray:
+    """Vectorized standard-normal CDF Phi(z)."""
+    z = np.asarray(z, dtype=float)
+    if _ndtr is not None:
+        return _ndtr(z)
+    return 0.5 * (1.0 + np.vectorize(math.erf)(z / _SQRT2))
 
 
 def expected_improvement(mean: np.ndarray, var: np.ndarray, best: float) -> np.ndarray:
@@ -20,11 +54,14 @@ def expected_improvement(mean: np.ndarray, var: np.ndarray, best: float) -> np.n
     z = (best - mean) / std
     # Phi and phi of the standard normal
     phi = np.exp(-0.5 * z**2) / np.sqrt(2 * np.pi)
-    from math import erf
-
-    Phi = 0.5 * (1.0 + np.vectorize(erf)(z / np.sqrt(2.0)))
-    ei = (best - mean) * Phi + std * phi
+    ei = (best - mean) * normal_cdf(z) + std * phi
     return np.maximum(ei, 0.0)
+
+
+def ei_matrix(means: np.ndarray, vars_: np.ndarray, bests: np.ndarray) -> np.ndarray:
+    """Row-wise EI: means/vars_ (S, N), bests (S,) -> EI (S, N)."""
+    bests = np.asarray(bests, dtype=float)
+    return expected_improvement(means, vars_, bests[:, None])
 
 
 def ei_scores(model: Surrogate, X: np.ndarray, best: float) -> np.ndarray:
@@ -32,21 +69,85 @@ def ei_scores(model: Surrogate, X: np.ndarray, best: float) -> np.ndarray:
     return expected_improvement(mean, var, best)
 
 
-def rank_aggregate(score_lists: Sequence[np.ndarray], weights: Sequence[float]) -> np.ndarray:
+# Fused planes keyed by the identities of their member arenas. PackedForest
+# arenas are immutable and cached per PRF fit, so the same source set maps
+# to the same key across recommend calls within a rung; the stored pack list
+# guards against id() reuse. Small LRU — source sets churn with refits.
+_PLANE_CACHE: "OrderedDict[tuple, Tuple[list, ForestPlane]]" = OrderedDict()
+_PLANE_CACHE_MAX = 8
+
+
+def _plane_for(packs: list) -> ForestPlane:
+    key = tuple(id(p) for p in packs)
+    entry = _PLANE_CACHE.get(key)
+    if entry is not None and all(a is b for a, b in zip(entry[0], packs)):
+        _PLANE_CACHE.move_to_end(key)
+        return entry[1]
+    plane = ForestPlane(packs)
+    _PLANE_CACHE[key] = (packs, plane)
+    while len(_PLANE_CACHE) > _PLANE_CACHE_MAX:
+        _PLANE_CACHE.popitem(last=False)
+    return plane
+
+
+def predict_sources(
+    models: Sequence[Surrogate], X: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(means, vars), each (S, N), for all source surrogates on one pool.
+
+    When every source is a fitted PRF on a packed backend, their arenas fuse
+    into one :class:`ForestPlane` descent; otherwise each model predicts in
+    turn (the GP / legacy-loop fallback).
+    """
+    X = np.atleast_2d(np.asarray(X, dtype=float))
+    fusable = len(models) > 1 and all(
+        isinstance(m, ProbabilisticRandomForest) and m.trees and m.backend != "loop"
+        for m in models
+    )
+    if fusable:
+        plane = _plane_for([m.pack() for m in models])
+        # deterministic backend for a mixed-backend ensemble: an accelerated
+        # backend wins over numpy regardless of model order
+        backends = {m.backend for m in models}
+        backend = next((b for b in ("pallas", "jax", "auto") if b in backends), "numpy")
+        return plane.predict(X, backend=backend)
+    means = np.empty((len(models), X.shape[0]))
+    vars_ = np.empty_like(means)
+    for i, m in enumerate(models):
+        means[i], vars_[i] = m.predict(X)
+    return means, vars_
+
+
+def score_sources(
+    models: Sequence[Surrogate], X: np.ndarray, incumbents: Sequence[float]
+) -> np.ndarray:
+    """Fused acquisition: EI of every source on every candidate, shape (S, N)."""
+    means, vars_ = predict_sources(models, X)
+    return ei_matrix(means, vars_, np.asarray(incumbents, dtype=float))
+
+
+def aggregate_ranks(scores: np.ndarray, weights: Sequence[float]) -> np.ndarray:
     """Weighted rank aggregation R(x) = sum_i w_i * R_i(x)  (paper §6.2).
 
-    Each score list is converted to ranks where rank 0 = best (highest
-    acquisition score). Lower aggregate rank = more promising. Returns the
-    aggregate rank per candidate.
+    ``scores`` is the (S, N) acquisition matrix; each row is converted to
+    ranks where rank 0 = best (highest score). Lower aggregate rank = more
+    promising. Returns the aggregate rank per candidate, shape (N,).
     """
-    if not score_lists:
+    scores = np.atleast_2d(np.asarray(scores, dtype=float))
+    if scores.size == 0:
         raise ValueError("no scores to aggregate")
-    n = len(score_lists[0])
-    agg = np.zeros(n, dtype=float)
-    for scores, w in zip(score_lists, weights):
-        # argsort of -scores: position in the sorted order = rank
-        order = np.argsort(-np.asarray(scores), kind="stable")
-        ranks = np.empty(n, dtype=float)
-        ranks[order] = np.arange(n, dtype=float)
-        agg += float(w) * ranks
-    return agg
+    s, n = scores.shape
+    order = np.argsort(-scores, axis=1, kind="stable")
+    ranks = np.empty((s, n), dtype=float)
+    np.put_along_axis(
+        ranks, order, np.broadcast_to(np.arange(n, dtype=float), (s, n)), axis=1
+    )
+    w = np.asarray(weights, dtype=float)
+    return (w[:, None] * ranks).sum(axis=0)
+
+
+def rank_aggregate(score_lists: Sequence[np.ndarray], weights: Sequence[float]) -> np.ndarray:
+    """Back-compat wrapper over :func:`aggregate_ranks` for a list of rows."""
+    if len(score_lists) == 0:
+        raise ValueError("no scores to aggregate")
+    return aggregate_ranks(np.asarray(score_lists, dtype=float), weights)

@@ -17,20 +17,21 @@ other.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .acquisition import ei_scores, rank_aggregate
+from .acquisition import aggregate_ranks, score_sources
 from .knowledge import TaskRecord
 from .similarity import TaskWeights, surrogate_for_task
 from .space import ConfigSpace
-from .surrogate import ProbabilisticRandomForest, Surrogate
+from .surrogate import Surrogate, make_forest
 
 Config = Dict[str, Any]
 
-__all__ = ["CandidateGenerator", "WarmStartQueue", "phase1_config"]
+__all__ = ["CandidateGenerator", "SurrogateStore", "WarmStartQueue", "phase1_config"]
 
 
 def phase1_config(weights: TaskWeights, tasks: Dict[str, TaskRecord]) -> Optional[Config]:
@@ -94,21 +95,78 @@ class SurrogateSource:
     incumbent: float  # best observed value for its own data (EI reference)
 
 
+class SurrogateStore:
+    """Keyed surrogate cache with rung-to-rung reuse and LRU eviction.
+
+    One entry per source name (``task:<tid>`` / ``fid:<delta>:<tid>``),
+    fingerprinted by the observation count the model was fitted on: a
+    fidelity surrogate is only refit when its rung gained observations, so
+    evaluations at one Hyperband rung never invalidate the other rungs'
+    models. Replacing a stale fingerprint drops the old model immediately;
+    the LRU cap bounds memory across many tasks/brackets.
+    """
+
+    def __init__(self, max_entries: int = 64):
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[str, Tuple[int, Surrogate, float]]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(
+        self,
+        name: str,
+        fingerprint: int,
+        build: Callable[[], Optional[Tuple[Surrogate, float]]],
+    ) -> Optional[Tuple[Surrogate, float]]:
+        """Return the cached (model, incumbent) for ``name`` if its
+        fingerprint still matches, else (re)build and cache it."""
+        entry = self._entries.get(name)
+        if entry is not None and entry[0] == fingerprint:
+            self._entries.move_to_end(name)
+            self.hits += 1
+            return entry[1], entry[2]
+        built = build()
+        if built is None:
+            return None
+        self.misses += 1
+        self._entries[name] = (fingerprint, built[0], built[1])
+        self._entries.move_to_end(name)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return built
+
+
 class CandidateGenerator:
-    def __init__(self, space: ConfigSpace, seed: int = 0, pool_size: int = 256):
+    def __init__(
+        self,
+        space: ConfigSpace,
+        seed: int = 0,
+        pool_size: int = 256,
+        backend: Optional[str] = None,
+        cache_entries: int = 64,
+    ):
         self.space = space                # full space: defines the surrogate encoding
         self.sample_space = space         # possibly compressed: defines the sampling region
         self.seed = seed
         self.pool_size = pool_size
+        self.backend = backend            # packed-forest backend for fitted surrogates
         self._rng = np.random.default_rng(seed)
-        self._model_cache = {}
+        self._store = SurrogateStore(max_entries=cache_entries)
 
     def set_sample_space(self, space: ConfigSpace) -> None:
         """Install the compressed space; candidates are sampled from it and
         completed with defaults for dropped knobs before encoding."""
         self.sample_space = space
 
-    _model_cache: Dict[Tuple[str, int], Tuple[Surrogate, float]] = None  # set in __init__
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        s = self._store
+        return {"hits": s.hits, "misses": s.misses, "evictions": s.evictions, "size": len(s)}
 
     # ------------------------------------------------------------ surrogates
     def build_sources(
@@ -119,35 +177,43 @@ class CandidateGenerator:
         fidelities: Sequence[float],
     ) -> List[SurrogateSource]:
         sources: List[SurrogateSource] = []
-        # historical tasks (surrogates cached: source observations are frozen)
+        # historical tasks (cached: source observations are frozen, so the
+        # fingerprint only changes if the task record itself grows)
         for tid, w in weights.weights.items():
             if tid == "__target__" or w <= 0 or tid not in tasks:
                 continue
-            key = (f"task:{tid}", len(tasks[tid].observations))
-            if key not in self._model_cache:
-                m = surrogate_for_task(self.space, tasks[tid], seed=self.seed)
+
+            def build_task(task=tasks[tid]):
+                m = surrogate_for_task(self.space, task, seed=self.seed, backend=self.backend)
                 if m is None:
-                    continue
-                obs = tasks[tid].full_fidelity()
-                inc = min(o.performance for o in obs) if obs else 0.0
-                self._model_cache[key] = (m, inc)
-            m, inc = self._model_cache[key]
-            sources.append(SurrogateSource(name=f"task:{tid}", model=m, weight=w, incumbent=inc))
-        # current task, one surrogate per fidelity level with observations
+                    return None
+                obs = task.full_fidelity()
+                return m, (min(o.performance for o in obs) if obs else 0.0)
+
+            got = self._store.get(f"task:{tid}", len(tasks[tid].observations), build_task)
+            if got is None:
+                continue
+            sources.append(
+                SurrogateSource(name=f"task:{tid}", model=got[0], weight=w, incumbent=got[1])
+            )
+        # current task, one surrogate per fidelity level with observations;
+        # rung-to-rung reuse: only the rung whose observation count changed
+        # is refit, the other fidelity surrogates come from the store
         w_t = weights.weights.get("__target__", 0.0)
         for d in fidelities:
             obs = target.at_fidelity(d)
             if len(obs) < 2:
                 continue
-            key = (f"fid:{d:.6f}:{target.task_id}", len(obs))
-            if key in self._model_cache:
-                m, _ = self._model_cache[key]
-                y = np.array([o.performance for o in obs])
-            else:
+
+            def build_fid(obs=obs):
                 X = self.space.encode_many([o.config for o in obs])
                 y = np.array([o.performance for o in obs])
-                m = ProbabilisticRandomForest(seed=self.seed).fit(X, y)
-                self._model_cache[key] = (m, float(y.min()))
+                m = make_forest(seed=self.seed, backend=self.backend).fit(X, y)
+                return m, float(y.min())
+
+            got = self._store.get(f"fid:{d:.6f}:{target.task_id}", len(obs), build_fid)
+            if got is None:
+                continue
             # full fidelity of the target carries the target weight; lower
             # fidelities share it, scaled by their level (closer to full =
             # more trustworthy), mirroring MFES-style fidelity weighting.
@@ -157,7 +223,7 @@ class CandidateGenerator:
                 # task's own data is still the only guidance; give it mass.
                 wt = d
             sources.append(
-                SurrogateSource(name=f"fid:{d:.3f}", model=m, weight=wt, incumbent=float(y.min()))
+                SurrogateSource(name=f"fid:{d:.3f}", model=got[0], weight=wt, incumbent=got[1])
             )
         return sources
 
@@ -181,25 +247,22 @@ class CandidateGenerator:
         incumbents: Sequence[Config] = (),
         exclude: Sequence[Config] = (),
     ) -> List[Config]:
-        """Top-n candidates by weighted rank-aggregated EI (§6.2)."""
+        """Top-n candidates by weighted rank-aggregated EI (§6.2).
+
+        The pool is encoded once; all sources score it in one fused pass
+        (shared packed-forest descent + EI matrix + rank aggregation).
+        """
         pool = self._candidate_pool(incumbents)
         # de-duplicate against already-evaluated configs
         seen = {self._key(c) for c in exclude}
         pool = [c for c in pool if self._key(c) not in seen] or pool
-        if not sources:
+        active = [s for s in sources if s.weight > 0]
+        if not active:
             self._rng.shuffle(pool)
             return pool[:n]
         X = self.space.encode_many(pool)
-        score_lists, wts = [], []
-        for s in sources:
-            if s.weight <= 0:
-                continue
-            score_lists.append(ei_scores(s.model, X, s.incumbent))
-            wts.append(s.weight)
-        if not score_lists:
-            self._rng.shuffle(pool)
-            return pool[:n]
-        agg = rank_aggregate(score_lists, wts)
+        scores = score_sources([s.model for s in active], X, [s.incumbent for s in active])
+        agg = aggregate_ranks(scores, [s.weight for s in active])
         order = np.argsort(agg, kind="stable")
         return [pool[i] for i in order[:n]]
 

@@ -65,6 +65,9 @@ class MFTuneOptions:
     sc_refresh_every: int = 1             # iterations between SC refreshes
     early_stop_factor: float = 1.0
     compressor: Optional[Callable[..., ConfigSpace]] = None  # SC strategy override (Fig. 6)
+    surrogate_backend: Optional[str] = None  # packed-forest backend; None = module
+                                             # default (see set_forest_backend),
+                                             # "loop" = legacy per-tree reference
 
 
 @dataclass
@@ -84,6 +87,7 @@ class TuningResult:
     n_full_evaluations: int
     mfo_activation_time: Optional[float]
     overheads: Dict[str, float] = field(default_factory=dict)
+    surrogate_cache: Dict[str, int] = field(default_factory=dict)  # store hit/miss counters
 
 
 class MFTune:
@@ -112,7 +116,9 @@ class MFTune:
 
         self.sim = SimilarityEngine(self.space, self.kb, seed=self.opt.seed)
         self.compressor = SpaceCompressor(self.space, alpha=self.opt.alpha, seed=self.opt.seed)
-        self.gen = CandidateGenerator(self.space, seed=self.opt.seed)
+        self.gen = CandidateGenerator(
+            self.space, seed=self.opt.seed, backend=self.opt.surrogate_backend
+        )
         self.ws_queue = WarmStartQueue()
         self.hb = HyperbandRunner(
             R=self.opt.R, eta=self.opt.eta, early_stop_factor=self.opt.early_stop_factor,
@@ -320,6 +326,7 @@ class MFTune:
             n_full_evaluations=self._n_full,
             mfo_activation_time=self._mfo_activation_time,
             overheads=dict(self._overheads),
+            surrogate_cache=self.gen.cache_stats,
         )
 
     # --------------------------------------------------------------- BO step

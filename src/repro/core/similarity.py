@@ -24,7 +24,7 @@ from scipy import stats
 from .gbm import GradientBoostedTrees
 from .knowledge import KnowledgeBase, TaskRecord
 from .space import ConfigSpace
-from .surrogate import ProbabilisticRandomForest, Surrogate
+from .surrogate import Surrogate, make_forest
 
 __all__ = [
     "kendall_tau",
@@ -49,7 +49,11 @@ def kendall_tau(a: Sequence[float], b: Sequence[float]) -> Tuple[float, float]:
 
 
 def surrogate_for_task(
-    space: ConfigSpace, task: TaskRecord, fidelity: Optional[float] = None, seed: int = 0
+    space: ConfigSpace,
+    task: TaskRecord,
+    fidelity: Optional[float] = None,
+    seed: int = 0,
+    backend: Optional[str] = None,
 ) -> Optional[Surrogate]:
     """Fit a PRF on a task's observations in the given space encoding."""
     if fidelity is None:
@@ -60,7 +64,7 @@ def surrogate_for_task(
         return None
     X = space.encode_many([o.config for o in obs])
     y = np.array([o.performance for o in obs])
-    return ProbabilisticRandomForest(seed=seed).fit(X, y)
+    return make_forest(seed=seed, backend=backend).fit(X, y)
 
 
 def eq2_similarity(
@@ -193,7 +197,7 @@ class SimilarityEngine:
             tr, te = folds != f, folds == f
             if tr.sum() < 2 or te.sum() < 1:
                 return 0.0
-            m = ProbabilisticRandomForest(seed=self.seed).fit(X[tr], y[tr])
+            m = make_forest(seed=self.seed).fit(X[tr], y[tr])
             preds[te] = m.predict_mean(X[te])
         tau, _ = kendall_tau(preds, y)
         return max(tau, 0.0)

@@ -10,17 +10,41 @@ variance, as in Hutter et al. 2011).
 A small exact Gaussian Process (Matérn-5/2) is also provided — it is *not*
 used by MFTune itself but by the Tuneful baseline's multi-task GP.
 
-Everything is pure numpy; data sets here are O(10^2-10^3) points.
+Ensemble inference runs on a *packed* representation: ``pack()`` stacks all
+trees of a forest into one struct-of-arrays :class:`PackedForest` (feature /
+threshold / child / leaf-stat arrays with per-tree root offsets) so predict
+is a single level-synchronous gather descent over (n_trees × n_points)
+instead of a per-tree Python loop. :class:`ForestPlane` extends the same
+arena across *several* forests (one per source task / fidelity level) so the
+combined surrogate of §6.2 is evaluated in one fused pass. The descent also
+has jax and pallas backends (``repro.kernels.forest_eval``); all backends
+route points to identical leaves, so (mean, var) agree bit-for-bit with the
+legacy loop, which is kept as ``predict_loop`` for equivalence tests.
+
+The default path is pure numpy; data sets here are O(10^2-10^3) points.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+import contextlib
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["RegressionTree", "ProbabilisticRandomForest", "GaussianProcess", "Surrogate"]
+__all__ = [
+    "RegressionTree",
+    "ProbabilisticRandomForest",
+    "PackedForest",
+    "ForestPlane",
+    "GaussianProcess",
+    "Surrogate",
+    "make_forest",
+    "set_forest_backend",
+    "get_forest_backend",
+    "forest_backend",
+    "packed_descend",
+]
 
 
 class Surrogate:
@@ -106,10 +130,11 @@ class RegressionTree:
             csum2 = np.cumsum(ys_sorted**2)
             n = len(idx)
             pos = np.arange(self.min_samples_leaf, n - self.min_samples_leaf + 1)
+            pos = pos[(pos >= 1) & (pos <= n - 1)]  # both sides non-empty
             if len(pos) == 0:
                 continue
-            valid = xs_sorted[pos - 1] < xs_sorted[np.minimum(pos, n - 1)]
-            pos = pos[valid[: len(pos)]] if len(valid) >= len(pos) else pos[valid]
+            valid = xs_sorted[pos - 1] < xs_sorted[pos]  # split between distinct values
+            pos = pos[valid]
             if len(pos) == 0:
                 continue
             nl = pos.astype(float)
@@ -143,6 +168,17 @@ class RegressionTree:
         self._right = np.array([nd.right for nd in self.nodes], dtype=np.int64)
         self._mean = np.array([nd.mean for nd in self.nodes], dtype=float)
         self._var = np.array([nd.var for nd in self.nodes], dtype=float)
+        # actual depth (children are appended after their parent, so one
+        # forward pass assigns levels top-down)
+        level = np.zeros(n, dtype=np.int64)
+        depth = 0
+        for i in range(n):
+            if self._feat[i] >= 0:
+                child_level = level[i] + 1
+                level[self._left[i]] = child_level
+                level[self._right[i]] = child_level
+                depth = max(depth, int(child_level))
+        self._depth = depth
 
     def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """Vectorized descent: O(depth * n) per call."""
@@ -162,6 +198,205 @@ class RegressionTree:
         return self._mean[nid], self._var[nid]
 
 
+# ---------------------------------------------------------------------------
+# Packed forest plane (struct-of-arrays ensemble inference)
+# ---------------------------------------------------------------------------
+
+
+def packed_descend(
+    feat: np.ndarray,
+    thr: np.ndarray,
+    child: np.ndarray,
+    roots: np.ndarray,
+    X: np.ndarray,
+    depth: int,
+) -> np.ndarray:
+    """Level-synchronous descent over a packed node arena (numpy backend).
+
+    Node encoding: leaves carry ``thr = +inf`` and self-loop children, so
+    every lane takes the "left" branch into itself once it lands on a leaf
+    and the loop needs no active-lane bookkeeping. ``child`` interleaves the
+    two children of node ``i`` at ``[2i, 2i+1]`` so the post-comparison
+    branch is a single gather. Returns leaf node ids, shape (T, N).
+    """
+    X = np.ascontiguousarray(X, dtype=float)
+    N, D = X.shape
+    T = len(roots)
+    xflat = X.reshape(-1)
+    col = np.broadcast_to((np.arange(N, dtype=np.intp) * D)[None, :], (T, N))
+    nid = np.repeat(roots[:, None], N, axis=1)
+    buf_i = np.empty((T, N), dtype=np.intp)
+    buf_x = np.empty((T, N))
+    buf_t = np.empty((T, N))
+    for _ in range(depth):
+        np.take(feat, nid, out=buf_i)
+        buf_i += col
+        np.take(xflat, buf_i, out=buf_x)
+        np.take(thr, nid, out=buf_t)
+        go_right = buf_x > buf_t
+        nid += nid
+        nid += go_right
+        np.take(child, nid, out=nid)
+    return nid
+
+
+@dataclass
+class PackedForest:
+    """All trees of one forest stacked into a struct-of-arrays node arena.
+
+    ``feat``/``thr``/``mean``/``var`` are per-node (leaves: feat clamped to
+    0, thr = +inf); ``child`` holds the interleaved (left, right) pointers
+    rebased to arena indices, with leaves pointing at themselves; ``roots``
+    holds each tree's root index. ``y_mean``/``y_std`` carry the fit-time
+    target normalization so predictions are self-contained.
+    """
+
+    feat: np.ndarray          # (n_nodes,) intp
+    thr: np.ndarray           # (n_nodes,) float64
+    child: np.ndarray         # (2 * n_nodes,) intp
+    mean: np.ndarray          # (n_nodes,) float64
+    var: np.ndarray           # (n_nodes,) float64
+    roots: np.ndarray         # (n_trees,) intp
+    depth: int                # max tree depth in the arena
+    y_mean: float = 0.0
+    y_std: float = 1.0
+
+    @property
+    def n_trees(self) -> int:
+        return len(self.roots)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.feat)
+
+    @staticmethod
+    def from_trees(
+        trees: Sequence[RegressionTree], y_mean: float = 0.0, y_std: float = 1.0
+    ) -> "PackedForest":
+        feat, thr, child, mean, var, roots = [], [], [], [], [], []
+        off = 0
+        depth = 0
+        for tree in trees:
+            if not hasattr(tree, "_feat"):
+                tree._freeze()
+            n = len(tree._feat)
+            leaf = tree._feat < 0
+            feat.append(np.where(leaf, 0, tree._feat))
+            thr.append(np.where(leaf, np.inf, tree._thr))
+            self_idx = np.arange(n)
+            left = np.where(leaf, self_idx, tree._left) + off
+            right = np.where(leaf, self_idx, tree._right) + off
+            child.append(np.stack([left, right], axis=1).reshape(-1))
+            mean.append(tree._mean)
+            var.append(tree._var)
+            roots.append(off)
+            depth = max(depth, tree._depth)
+            off += n
+        return PackedForest(
+            feat=np.concatenate(feat).astype(np.intp),
+            thr=np.concatenate(thr),
+            child=np.concatenate(child).astype(np.intp),
+            mean=np.concatenate(mean),
+            var=np.concatenate(var),
+            roots=np.asarray(roots, dtype=np.intp),
+            depth=depth,
+            y_mean=y_mean,
+            y_std=y_std,
+        )
+
+    # ------------------------------------------------------------- inference
+    def predict_trees(self, X: np.ndarray, backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
+        """Per-tree leaf stats, each shape (n_trees, n_points)."""
+        X = np.atleast_2d(np.asarray(X, dtype=float))
+        if backend == "numpy":
+            nid = packed_descend(self.feat, self.thr, self.child, self.roots, X, self.depth)
+            return np.take(self.mean, nid), np.take(self.var, nid)
+        from ..kernels.forest_eval.ops import forest_eval
+
+        return forest_eval(
+            self.feat, self.thr, self.child, self.mean, self.var, self.roots,
+            X, self.depth, backend=backend,
+        )
+
+    def combine(self, m_t: np.ndarray, v_t: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Ensemble (mean, var) from per-tree stats — the exact op sequence
+        of the legacy per-tree loop, so results are bit-identical."""
+        mean = m_t.mean(axis=0)
+        var = v_t.mean(axis=0) + m_t.var(axis=0)
+        var = np.maximum(var, 1e-10)
+        return mean * self.y_std + self.y_mean, var * self.y_std**2
+
+    def predict(self, X: np.ndarray, backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
+        return self.combine(*self.predict_trees(X, backend=backend))
+
+
+class ForestPlane:
+    """Several packed forests fused into one arena for multi-source predict.
+
+    The combined surrogate (one PRF per source task plus one per fidelity
+    level, §6.2) evaluates every source on the same candidate pool; fusing
+    the arenas means one gather descent over all sources' trees instead of a
+    Python loop over forests. Per-source combination still runs on each
+    forest's own tree slice, so the output matches per-forest ``predict``
+    bit-for-bit.
+    """
+
+    def __init__(self, forests: Sequence[PackedForest]):
+        if not forests:
+            raise ValueError("ForestPlane needs at least one forest")
+        self.forests = list(forests)
+        offs = np.cumsum([0] + [f.n_nodes for f in forests])
+        self.feat = np.concatenate([f.feat for f in forests])
+        self.thr = np.concatenate([f.thr for f in forests])
+        self.child = np.concatenate([f.child + off for f, off in zip(forests, offs)])
+        self.mean = np.concatenate([f.mean for f in forests])
+        self.var = np.concatenate([f.var for f in forests])
+        self.roots = np.concatenate([f.roots + off for f, off in zip(forests, offs)])
+        self.depth = max(f.depth for f in forests)
+        tree_counts = np.cumsum([0] + [f.n_trees for f in forests])
+        self.tree_slices = [
+            (int(a), int(b)) for a, b in zip(tree_counts[:-1], tree_counts[1:])
+        ]
+        self.y_means = np.array([f.y_mean for f in forests])
+        self.y_stds = np.array([f.y_std for f in forests])
+
+    @staticmethod
+    def from_forests(forests: Sequence[PackedForest]) -> "ForestPlane":
+        return ForestPlane(forests)
+
+    def predict(self, X: np.ndarray, backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
+        """Fused multi-source predict: (means, vars), each (S, N)."""
+        X = np.atleast_2d(np.asarray(X, dtype=float))
+        if backend == "numpy":
+            nid = packed_descend(self.feat, self.thr, self.child, self.roots, X, self.depth)
+            m_t, v_t = np.take(self.mean, nid), np.take(self.var, nid)
+        else:
+            tree_counts = {f.n_trees for f in self.forests}
+            if backend in ("jax", "auto") and len(tree_counts) == 1:
+                # uniform tree counts: descent + combine fuse on device
+                from ..kernels.forest_eval.ops import forest_plane_eval
+
+                try:
+                    return forest_plane_eval(
+                        self.feat, self.thr, self.child, self.mean, self.var,
+                        self.roots, X, self.depth, self.y_means, self.y_stds,
+                        trees_per_source=next(iter(tree_counts)),
+                    )
+                except RuntimeError:
+                    pass  # no jax: fall through to the numpy-combine path
+            from ..kernels.forest_eval.ops import forest_eval
+
+            m_t, v_t = forest_eval(
+                self.feat, self.thr, self.child, self.mean, self.var, self.roots,
+                X, self.depth, backend=backend,
+            )
+        means = np.empty((len(self.forests), X.shape[0]))
+        vars_ = np.empty_like(means)
+        for s, ((a, b), f) in enumerate(zip(self.tree_slices, self.forests)):
+            means[s], vars_[s] = f.combine(m_t[a:b], v_t[a:b])
+        return means, vars_
+
+
 class ProbabilisticRandomForest(Surrogate):
     def __init__(
         self,
@@ -171,6 +406,7 @@ class ProbabilisticRandomForest(Surrogate):
         min_samples_leaf: int = 1,
         bootstrap: bool = True,
         seed: int = 0,
+        backend: Optional[str] = None,
     ):
         self.n_trees = n_trees
         self.max_depth = max_depth
@@ -178,7 +414,11 @@ class ProbabilisticRandomForest(Surrogate):
         self.min_samples_leaf = min_samples_leaf
         self.bootstrap = bootstrap
         self.seed = seed
+        # "loop" = legacy per-tree reference; "numpy"/"jax"/"pallas"/"auto"
+        # select the packed-descent backend (None = module default)
+        self.backend = backend or get_forest_backend()
         self.trees: List[RegressionTree] = []
+        self._packed: Optional[PackedForest] = None
         self._y_mean = 0.0
         self._y_std = 1.0
         self.X_: Optional[np.ndarray] = None
@@ -193,6 +433,7 @@ class ProbabilisticRandomForest(Surrogate):
         yn = (y - self._y_mean) / self._y_std
         rng = np.random.default_rng(self.seed)
         self.trees = []
+        self._packed = None
         n = len(y)
         for t in range(self.n_trees):
             trng = np.random.default_rng(rng.integers(2**63))
@@ -207,7 +448,25 @@ class ProbabilisticRandomForest(Surrogate):
             self.trees.append(tree)
         return self
 
+    def pack(self) -> PackedForest:
+        """Stack all trees into one struct-of-arrays arena (cached per fit)."""
+        if not self.trees:
+            raise ValueError("pack() before fit()")
+        if self._packed is None:
+            self._packed = PackedForest.from_trees(self.trees, self._y_mean, self._y_std)
+        return self._packed
+
     def predict(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        X = np.atleast_2d(np.asarray(X, dtype=float))
+        if not self.trees:
+            return np.zeros(len(X)), np.ones(len(X))
+        if self.backend == "loop":
+            return self.predict_loop(X)
+        return self.pack().predict(X, backend=self.backend)
+
+    def predict_loop(self, X: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Legacy per-tree loop — kept as the reference the packed plane is
+        equivalence-tested against."""
         X = np.atleast_2d(np.asarray(X, dtype=float))
         if not self.trees:
             return np.zeros(len(X)), np.ones(len(X))
@@ -220,6 +479,39 @@ class ProbabilisticRandomForest(Surrogate):
         var = vs.mean(axis=0) + ms.var(axis=0)
         var = np.maximum(var, 1e-10)
         return mean * self._y_std + self._y_mean, var * self._y_std**2
+
+
+# ---------------------------------------------------------------------------
+# Forest factory — the one PRF construction point the whole repo shares
+# ---------------------------------------------------------------------------
+
+_DEFAULT_BACKEND = "numpy"
+
+
+def get_forest_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+def set_forest_backend(backend: str) -> None:
+    """Set the module-default packed-descent backend ("loop" forces the
+    legacy per-tree reference everywhere — used by equivalence tests)."""
+    global _DEFAULT_BACKEND
+    _DEFAULT_BACKEND = backend
+
+
+@contextlib.contextmanager
+def forest_backend(backend: str):
+    prev = get_forest_backend()
+    set_forest_backend(backend)
+    try:
+        yield
+    finally:
+        set_forest_backend(prev)
+
+
+def make_forest(seed: int = 0, backend: Optional[str] = None, **kwargs) -> ProbabilisticRandomForest:
+    """Packed factory: every surrogate stack in the repo builds PRFs here."""
+    return ProbabilisticRandomForest(seed=seed, backend=backend, **kwargs)
 
 
 # ---------------------------------------------------------------------------

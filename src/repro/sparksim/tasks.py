@@ -18,7 +18,7 @@ import numpy as np
 
 from ..core.acquisition import ei_scores
 from ..core.knowledge import KnowledgeBase, Observation, TaskRecord
-from ..core.surrogate import ProbabilisticRandomForest
+from ..core.surrogate import make_forest
 from .knobs import spark_space
 from .workload import SparkWorkload, make_task_id
 
@@ -86,7 +86,7 @@ def generate_history(
         if len(ok) >= 2:
             X = space.encode_many([o.config for o in ok])
             y = np.array([o.performance for o in ok])
-            model = ProbabilisticRandomForest(seed=seed).fit(X, y)
+            model = make_forest(seed=seed).fit(X, y)
             pool = space.sample(rng, 192)
             scores = ei_scores(model, space.encode_many(pool), float(y.min()))
             cfg = pool[int(np.argmax(scores))]

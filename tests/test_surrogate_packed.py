@@ -1,0 +1,261 @@
+"""Packed-forest surrogate plane equivalence suite.
+
+Asserts that (1) ``PackedForest`` / ``ForestPlane`` reproduce the legacy
+per-tree loop bit-for-bit on the numpy backend and to <= 1e-9 on the jax /
+pallas (interpret) kernel backends, (2) the fused EI / rank acquisition
+matches a scalar ``math.erf`` reference and the legacy per-source loop,
+(3) the generator's ``SurrogateStore`` reuses fits across Hyperband rungs
+and only refits the rung whose observation count changed, (4) tree splits
+are SSE-optimal against a brute-force scan, and (5) MFTune incumbent
+trajectories are identical across surrogate backends at a fixed seed.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CandidateGenerator,
+    ConfigSpace,
+    FloatKnob,
+    ForestPlane,
+    KnowledgeBase,
+    Observation,
+    SurrogateStore,
+    TaskRecord,
+    aggregate_ranks,
+    expected_improvement,
+    make_forest,
+    rank_aggregate,
+    score_sources,
+)
+from repro.core.acquisition import ei_scores
+from repro.core.similarity import TaskWeights
+from repro.core.surrogate import RegressionTree
+
+DELTAS = [1 / 9, 1 / 3, 1.0]
+
+
+def _forests(n_sources=4, n=48, d=8, seed0=0):
+    rng = np.random.default_rng(seed0)
+    out = []
+    for s in range(n_sources):
+        X = rng.random((n, d))
+        y = 3 * X[:, 0] - X[:, 1] ** 2 + 0.1 * rng.normal(size=n)
+        out.append(make_forest(seed=seed0 + s).fit(X, y))
+    return out, rng.random((96, d))
+
+
+# ---------------------------------------------------------------- packed path
+
+
+@pytest.mark.parametrize("n,d,seed", [(16, 3, 0), (48, 8, 1), (120, 16, 2), (5, 2, 3)])
+def test_packed_matches_loop_bitwise(n, d, seed):
+    rng = np.random.default_rng(seed)
+    m = make_forest(seed=seed).fit(rng.random((n, d)), rng.random(n))
+    X = rng.random((64, d))
+    m_loop, v_loop = m.predict_loop(X)
+    m_pack, v_pack = m.predict(X)  # default backend: packed numpy
+    assert np.array_equal(m_loop, m_pack)
+    assert np.array_equal(v_loop, v_pack)
+
+
+def test_packed_constant_target_single_leaf():
+    rng = np.random.default_rng(0)
+    m = make_forest(seed=0).fit(rng.random((6, 2)), np.ones(6))  # root-only trees
+    X = rng.random((10, 2))
+    assert np.array_equal(m.predict(X)[0], m.predict_loop(X)[0])
+
+
+def test_unfit_forest_predicts_prior():
+    m = make_forest(seed=0)
+    mean, var = m.predict(np.zeros((3, 2)))
+    assert np.array_equal(mean, np.zeros(3)) and np.array_equal(var, np.ones(3))
+
+
+def test_plane_matches_per_forest_bitwise():
+    forests, X = _forests()
+    plane = ForestPlane.from_forests([m.pack() for m in forests])
+    means, vars_ = plane.predict(X)
+    for i, m in enumerate(forests):
+        m_ref, v_ref = m.predict_loop(X)
+        assert np.array_equal(means[i], m_ref)
+        assert np.array_equal(vars_[i], v_ref)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_kernel_backends_match_loop(backend):
+    pytest.importorskip("jax")
+    forests, X = _forests(n_sources=2, n=32, d=5)
+    for m in forests:
+        m_ref, v_ref = m.predict_loop(X)
+        m_k, v_k = m.pack().predict(X, backend=backend)
+        np.testing.assert_allclose(m_k, m_ref, atol=1e-9, rtol=0)
+        np.testing.assert_allclose(v_k, v_ref, atol=1e-9, rtol=0)
+    plane = ForestPlane.from_forests([m.pack() for m in forests])
+    means, vars_ = plane.predict(X, backend=backend)
+    for i, m in enumerate(forests):
+        m_ref, v_ref = m.predict_loop(X)
+        np.testing.assert_allclose(means[i], m_ref, atol=1e-9, rtol=0)
+        np.testing.assert_allclose(vars_[i], v_ref, atol=1e-9, rtol=0)
+
+
+# ------------------------------------------------------------- acquisition
+
+
+def test_ei_matches_scalar_erf_reference():
+    rng = np.random.default_rng(7)
+    mean = rng.normal(size=256)
+    var = rng.random(256) + 1e-4
+    best = 0.25
+    ei = expected_improvement(mean, var, best)
+    std = np.sqrt(np.maximum(var, 1e-12))
+    z = (best - mean) / std
+    phi = np.exp(-0.5 * z**2) / np.sqrt(2 * np.pi)
+    Phi = np.array([0.5 * (1.0 + math.erf(v / math.sqrt(2.0))) for v in z])
+    ref = np.maximum((best - mean) * Phi + std * phi, 0.0)
+    np.testing.assert_allclose(ei, ref, atol=1e-12, rtol=0)
+
+
+def test_score_sources_matches_per_source_scores():
+    forests, X = _forests(n_sources=5)
+    incumbents = [0.3, 0.5, 0.2, 0.4, 0.6]
+    fused = score_sources(forests, X, incumbents)
+    for i, (m, inc) in enumerate(zip(forests, incumbents)):
+        assert np.array_equal(fused[i], ei_scores(m, X, inc))
+
+
+def test_aggregate_ranks_matches_legacy_loop():
+    rng = np.random.default_rng(5)
+    scores = rng.random((4, 50))
+    weights = [0.4, 0.3, 0.2, 0.1]
+    agg = aggregate_ranks(scores, weights)
+    # the pre-refactor sequential implementation
+    ref = np.zeros(50)
+    for row, w in zip(scores, weights):
+        order = np.argsort(-row, kind="stable")
+        ranks = np.empty(50)
+        ranks[order] = np.arange(50, dtype=float)
+        ref += float(w) * ranks
+    assert np.array_equal(agg, ref)
+    assert np.array_equal(rank_aggregate(list(scores), weights), ref)
+    with pytest.raises(ValueError):
+        rank_aggregate([], [])
+
+
+# ------------------------------------------------------------ surrogate store
+
+
+def _target_with_rungs(space, rng, counts):
+    rec = TaskRecord(task_id="tgt", queries=["q0"])
+    for delta, k in zip(DELTAS, counts):
+        for cfg in space.sample(rng, k):
+            rec.observations.append(
+                Observation(config=cfg, performance=float(rng.random()), fidelity=delta)
+            )
+    return rec
+
+
+def test_store_cache_hits_across_rungs():
+    space = ConfigSpace([FloatKnob(f"x{i}", 0.0, 1.0) for i in range(4)])
+    rng = np.random.default_rng(0)
+    gen = CandidateGenerator(space, seed=0)
+    target = _target_with_rungs(space, rng, counts=(5, 4, 3))
+    weights = TaskWeights(weights={"__target__": 1.0}, similarities={}, used_meta=False)
+
+    s1 = gen.build_sources(weights, {}, target, DELTAS)
+    assert len(s1) == 3
+    assert gen.cache_stats == {"hits": 0, "misses": 3, "evictions": 0, "size": 3}
+
+    # same rung counts (a new Hyperband bracket, no new observations): all hits
+    s2 = gen.build_sources(weights, {}, target, DELTAS)
+    assert [s.name for s in s2] == [s.name for s in s1]
+    assert gen.cache_stats["hits"] == 3 and gen.cache_stats["misses"] == 3
+
+    # one rung gains an observation: only that rung's surrogate is refit
+    target.observations.append(
+        Observation(config=space.sample(rng, 1)[0], performance=0.5, fidelity=DELTAS[0])
+    )
+    gen.build_sources(weights, {}, target, DELTAS)
+    assert gen.cache_stats["misses"] == 4 and gen.cache_stats["hits"] == 5
+    assert gen.cache_stats["size"] == 3  # stale fingerprint replaced, not duplicated
+
+
+def test_store_caches_source_tasks_and_evicts():
+    space = ConfigSpace([FloatKnob("x0", 0.0, 1.0), FloatKnob("x1", 0.0, 1.0)])
+    rng = np.random.default_rng(1)
+    src = TaskRecord(task_id="s0", queries=["q0"])
+    for cfg in space.sample(rng, 6):
+        src.observations.append(
+            Observation(config=cfg, performance=float(rng.random()), fidelity=1.0)
+        )
+    gen = CandidateGenerator(space, seed=0)
+    weights = TaskWeights(weights={"s0": 1.0}, similarities={}, used_meta=False)
+    target = TaskRecord(task_id="tgt", queries=["q0"])
+    gen.build_sources(weights, {"s0": src}, target, DELTAS)
+    gen.build_sources(weights, {"s0": src}, target, DELTAS)
+    assert gen.cache_stats["hits"] == 1 and gen.cache_stats["misses"] == 1
+
+    store = SurrogateStore(max_entries=2)
+    for i in range(5):
+        store.get(f"n{i}", 0, lambda: (object(), 0.0))
+    assert len(store) == 2 and store.evictions == 3
+
+
+# ------------------------------------------------------------- split property
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 17, 42, 123, 999, 2024])
+def test_split_is_sse_optimal(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 24))
+    d = 3
+    X = rng.random((n, d))
+    y = rng.random(n)
+    msl = 2
+    tree = RegressionTree(
+        max_depth=1, min_samples_split=2, min_samples_leaf=msl, max_features=d,
+        rng=np.random.default_rng(seed + 1),
+    ).fit(X, y)
+    # brute-force SSE over every (feature, split between distinct values)
+    best_sse = np.inf
+    for f in range(d):
+        order = np.argsort(X[:, f], kind="stable")
+        xs, ys = X[order, f], y[order]
+        for p in range(msl, n - msl + 1):
+            if not xs[p - 1] < xs[p]:
+                continue
+            left, right = ys[:p], ys[p:]
+            sse = ((left - left.mean()) ** 2).sum() + ((right - right.mean()) ** 2).sum()
+            best_sse = min(best_sse, sse)
+    root = tree.nodes[0]
+    assert root.feature >= 0, "expected a split on continuous random data"
+    mask = X[:, root.feature] <= root.threshold
+    left, right = y[mask], y[~mask]
+    assert len(left) >= msl and len(right) >= msl
+    got = ((left - left.mean()) ** 2).sum() + ((right - right.mean()) ** 2).sum()
+    assert got <= best_sse + 1e-9
+
+
+# ------------------------------------------------- end-to-end backend identity
+
+
+def _traj(backend):
+    from repro.core import MFTune, MFTuneOptions
+    from repro.sparksim import SparkWorkload, TaskSpec, generate_history
+    from repro.tuneapi import Budget
+
+    kb = KnowledgeBase()
+    kb.add_task(
+        generate_history(TaskSpec("tpch", 100, "A").workload(), n_obs=12, n_init=5, seed=3),
+        persist=False,
+    )
+    wl = SparkWorkload("tpch", 600, "A")
+    opts = MFTuneOptions(seed=0, surrogate_backend=backend)
+    res = MFTune(wl, kb, opts).run(Budget(6 * 3600.0))
+    return [(p.time, p.best, tuple(sorted(p.config.items()))) for p in res.trajectory]
+
+
+def test_mftune_trajectory_identical_across_backends():
+    assert _traj("numpy") == _traj("loop")
