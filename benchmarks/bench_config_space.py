@@ -1,0 +1,133 @@
+"""Config-space plumbing throughput: scalar reference vs the columnar plane.
+
+The pool-generation bottleneck PR 5 attacks: every tuner in the repo
+(MFTune core, the five baselines, sparksim history generation) burns
+``sample`` + ``encode_many`` + ``mutate`` on 192-256-config pools per
+iteration, and ``RegressionTree`` fits dominate surrogate construction.
+Times the full pool path (sample -> unit-cube encode -> mutate) on the
+60-knob Spark space at 192 and 1024 configs, scalar-backend reference
+(per-knob, per-config loops + dict materialization, the pre-refactor
+shape) vs the columnar ConfigBatch path, and regression-tree fits at
+n=64/512 for the recursive vs the level-synchronous frontier builder.
+Every timed pair is equivalence-checked before timing; the cached JSON
+under results/bench/ is the baseline later PRs track.
+
+``--smoke`` (or REPRO_BENCH_SMOKE=1) runs 1 repetition for CI.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import cached
+
+POOL_SIZES = (192, 1024)
+TREE_SIZES = (64, 512)
+TREE_DIM = 16
+REPEATS = 20
+
+
+def _best(fn, repeats: int) -> float:
+    fn()  # warm up (plane compile, numpy dispatch)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _run():
+    from repro.core.space import log_sampling, space_backend
+    from repro.core.surrogate import RegressionTree
+    from repro.sparksim import spark_space
+
+    repeats = 1 if os.environ.get("REPRO_BENCH_SMOKE") == "1" else REPEATS
+    rows = []
+    space = spark_space()
+    d = space.dim
+
+    for n in POOL_SIZES:
+        def pool_columnar(n=n):
+            rng = np.random.default_rng(0)
+            pool = space.sample(rng, n)
+            X = pool.unit()
+            muts = space.mutate_many(pool, rng)
+            return X, muts.values
+
+        def pool_scalar(n=n):
+            # the pre-refactor shape: per-knob per-config loops, dicts at
+            # every stage, re-encoding from dicts
+            with log_sampling(True), space_backend("scalar"):
+                rng = np.random.default_rng(0)
+                cfgs = space.sample(rng, n).materialize()
+                X = np.stack([space.encode(c) for c in cfgs])
+                muts = space.mutate_many(cfgs, rng).materialize()
+            return X, muts
+
+        # equivalence gate: same draws => bit-identical pools (the scalar
+        # path runs under the same log-space geometry as the columnar one)
+        Xc, Vc = pool_columnar()
+        Xs, ms = pool_scalar()
+        assert np.array_equal(Xc, Xs)
+        from repro.core import ConfigBatch
+
+        assert np.array_equal(Vc, ConfigBatch.from_configs(space, ms).values)
+
+        t_scalar = _best(pool_scalar, repeats)
+        t_col = _best(pool_columnar, repeats)
+        rows.append({
+            "name": f"pool_scalar_{n}x{d}", "us_per_call": t_scalar * 1e6,
+            "derived": f"sample+encode+mutate, per-knob loops; {n / t_scalar:.0f} cfg/s",
+        })
+        rows.append({
+            "name": f"pool_columnar_{n}x{d}", "us_per_call": t_col * 1e6,
+            "derived": f"speedup {t_scalar / t_col:.1f}x vs scalar",
+        })
+
+    rng = np.random.default_rng(1)
+    for n in TREE_SIZES:
+        X = rng.random((n, TREE_DIM))
+        y = 3 * X[:, 0] - X[:, 1] ** 2 + 0.1 * rng.normal(size=n)
+
+        def fit(builder):
+            return RegressionTree(
+                min_samples_leaf=1, rng=np.random.default_rng(7), builder=builder
+            ).fit(X, y)
+
+        a, b = fit("recursive"), fit("frontier")
+        ma, va = a.predict(X)
+        mb, vb = b.predict(X)
+        assert np.array_equal(ma, mb) and np.array_equal(va, vb)
+
+        t_rec = _best(lambda: fit("recursive"), repeats)
+        t_fro = _best(lambda: fit("frontier"), repeats)
+        rows.append({
+            "name": f"tree_recursive_{n}x{TREE_DIM}", "us_per_call": t_rec * 1e6,
+            "derived": f"node-by-node Python recursion; {len(a.nodes)} nodes",
+        })
+        rows.append({
+            "name": f"tree_frontier_{n}x{TREE_DIM}", "us_per_call": t_fro * 1e6,
+            "derived": f"speedup {t_rec / t_fro:.1f}x vs recursive",
+        })
+    return rows
+
+
+def run(force: bool = False):
+    return cached("config_space", force, _run)
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        # smoke validates the equivalence gates + timing path without
+        # overwriting the committed multi-repetition baseline JSON
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        for r in _run():
+            print(r)
+    else:
+        for r in run(force=True):
+            print(r)

@@ -26,6 +26,7 @@ BENCHES = [
     ("roofline", "bench_roofline"),                     # §Roofline (ours)
     ("batch_eval", "bench_batch_eval"),                 # batched engine (ours)
     ("surrogate", "bench_surrogate"),                   # packed forest plane (ours)
+    ("config_space", "bench_config_space"),             # columnar space plane (ours)
 ]
 
 

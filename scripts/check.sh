@@ -13,13 +13,19 @@ python -m pytest -x -q tests/test_batch_eval.py
 echo "== packed-forest == per-tree-loop equivalence gate =="
 python -m pytest -x -q tests/test_surrogate_packed.py
 
+echo "== columnar-space == scalar / frontier == recursive equivalence gate =="
+python -m pytest -x -q tests/test_space_plane.py tests/test_tree_frontier.py
+
 echo "== tier-1: pytest -x -q (rest of the fast suite) =="
-python -m pytest -x -q --ignore=tests/test_batch_eval.py --ignore=tests/test_surrogate_packed.py
+python -m pytest -x -q --ignore=tests/test_batch_eval.py --ignore=tests/test_surrogate_packed.py \
+  --ignore=tests/test_space_plane.py --ignore=tests/test_tree_frontier.py
 
 if [[ "${1:-}" == "--slow" ]]; then
   echo "== slow tier =="
   python -m pytest -q -m slow
   echo "== surrogate bench smoke (1 repetition) =="
   python -m benchmarks.bench_surrogate --smoke
+  echo "== config-space bench smoke (1 repetition) =="
+  python -m benchmarks.bench_config_space --smoke
 fi
 echo "OK"

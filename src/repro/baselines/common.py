@@ -109,7 +109,9 @@ class BaselineTuner:
         y = np.array([o.performance for o in obs])
         return make_forest(seed=self.seed).fit(X, y)
 
-    def ei_pick(self, model, pool: List[Config], space=None) -> Config:
+    def ei_pick(self, model, pool: Sequence[Config], space=None) -> Config:
+        """Best-EI pick; a ConfigBatch pool is scored from its cached unit
+        encoding (no dict round-trip), only the winner materializes."""
         space = space or self.space
         ok = self._ok()
         best = min(o.performance for o in ok) if ok else 0.0

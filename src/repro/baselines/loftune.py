@@ -50,8 +50,9 @@ class LOFTune(BaselineTuner):
             # per-task z-normalized target: the simulator predicts *relative*
             # quality so different task scales can pool
             z = (perf - perf.mean()) / (perf.std() + 1e-9)
-            for o, zi in zip(obs, z):
-                Xs.append(np.concatenate([self.space.encode(o.config), mf]))
+            Xe = self.space.encode_many([o.config for o in obs])  # one pass
+            for xe, zi in zip(Xe, z):
+                Xs.append(np.concatenate([xe, mf]))
                 ys.append(float(zi))
         if len(ys) >= 10:
             self._pooled = make_forest(seed=self.seed, n_trees=12).fit(
@@ -76,8 +77,7 @@ class LOFTune(BaselineTuner):
             # screen warm candidates with the pooled simulator
             self._fit_pooled()
             if self._pooled is not None and warm and self._target_meta is not None:
-                mf = np.asarray(self._target_meta, dtype=float)
-                Z = np.array([np.concatenate([self.space.encode(c), mf]) for c in warm])
+                Z = self._with_meta(self.space.encode_many(warm))
                 order = np.argsort(self._pooled.predict_mean(Z))
                 warm = [warm[i] for i in order]
             for cfg in warm[: self.warm_k]:
@@ -89,6 +89,11 @@ class LOFTune(BaselineTuner):
                 return
             self.evaluate_full(budget, cfg)
 
+    def _with_meta(self, X: np.ndarray) -> np.ndarray:
+        """[config-encoding ++ target meta-features] rows, one broadcast."""
+        mf = np.asarray(self._target_meta, dtype=float)
+        return np.concatenate([X, np.broadcast_to(mf, (len(X), len(mf)))], axis=1)
+
     # ------------------------------------------------------------------ loop
     def propose(self, budget: Budget) -> Config:
         model = self.fit_surrogate()
@@ -96,10 +101,10 @@ class LOFTune(BaselineTuner):
         if model is None:
             return pool[0]
         # pooled-simulator pre-screen: keep the better half of the pool
+        # (columnar: the pool is encoded once and sliced, never re-encoded)
         self._fit_pooled()
         if self._pooled is not None and self._target_meta is not None:
-            mf = np.asarray(self._target_meta, dtype=float)
-            Z = np.array([np.concatenate([self.space.encode(c), mf]) for c in pool])
+            Z = self._with_meta(pool.unit())
             order = np.argsort(self._pooled.predict_mean(Z))
-            pool = [pool[i] for i in order[: len(pool) // 2]]
+            pool = pool.take(order[: len(pool) // 2])
         return self.ei_pick(model, pool)

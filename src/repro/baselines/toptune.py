@@ -28,6 +28,8 @@ class TopTune(BaselineTuner):
         rng = np.random.default_rng(seed)
         self.num_names = [k.name for k in self.space.knobs if isinstance(k, (FloatKnob, IntKnob))]
         self.cat_names = [k.name for k in self.space.knobs if isinstance(k, (CatKnob, BoolKnob))]
+        names = self.space.names
+        self._num_idx = np.array([names.index(n) for n in self.num_names], dtype=np.int64)
         # HeSBO: each original dim hashes to one synthetic dim with a sign
         self.h = rng.integers(0, d_low, len(self.num_names))
         self.sgn = rng.choice([-1.0, 1.0], len(self.num_names))
@@ -40,15 +42,18 @@ class TopTune(BaselineTuner):
 
     # --------------------------------------------------------- projection map
     def _lift(self, z: np.ndarray) -> Config:
-        """Synthetic point z in [0,1]^d_low -> full config (continuous part)."""
-        cfg: Config = dict(self._cat_state)
-        for i, name in enumerate(self.num_names):
-            u = z[self.h[i]]
-            if self.sgn[i] < 0:
-                u = 1.0 - u
-            # bucketization: quantize the projected coordinate
-            u = (np.floor(u * self.n_buckets) + 0.5) / self.n_buckets
-            cfg[name] = self.space.by_name[name].from_unit(float(u))
+        """Synthetic point z in [0,1]^d_low -> full config (continuous part).
+
+        One vectorized hash-gather + bucketization + whole-row decode
+        instead of a per-knob from_unit loop; categorical knobs are then
+        overwritten from the alternating-phase state.
+        """
+        u = np.full(self.space.dim, 0.5)
+        uz = z[self.h]
+        uz = np.where(self.sgn < 0, 1.0 - uz, uz)
+        u[self._num_idx] = (np.floor(uz * self.n_buckets) + 0.5) / self.n_buckets
+        cfg = self.space.decode(u)
+        cfg.update(self._cat_state)
         return cfg
 
     def propose(self, budget: Budget) -> Config:

@@ -95,7 +95,8 @@ class Tuneful(BaselineTuner):
         self._maybe_shrink()
         self._fit_source()
         ok = self._ok()
-        pool = [dict(self.space.default(), **c) for c in self.active_space.sample(self.rng, 192)]
+        # columnar: shrunk-space pool lifted to full space, encoded once
+        pool = self.space.complete_batch(self.active_space.sample(self.rng, 192))
         if len(ok) < 2:
             return pool[0]
         X = self.space.encode_many([o.config for o in ok])

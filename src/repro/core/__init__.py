@@ -11,7 +11,21 @@ Public API:
   MFTune                    — §4.1/§6.3 end-to-end controller
 """
 
-from .space import BoolKnob, CatKnob, ConfigSpace, FloatKnob, IntKnob, Intervals
+from .space import (
+    BoolKnob,
+    CatKnob,
+    ConfigBatch,
+    ConfigSpace,
+    FloatKnob,
+    IntKnob,
+    Intervals,
+    SpacePlane,
+    get_space_backend,
+    log_sampling,
+    set_log_sampling,
+    set_space_backend,
+    space_backend,
+)
 from .surrogate import (
     ForestPlane,
     GaussianProcess,
@@ -48,6 +62,8 @@ from .mftune import MFTune, MFTuneOptions, TuningResult
 
 __all__ = [
     "BoolKnob", "CatKnob", "ConfigSpace", "FloatKnob", "IntKnob", "Intervals",
+    "ConfigBatch", "SpacePlane", "get_space_backend", "set_space_backend",
+    "space_backend", "set_log_sampling", "log_sampling",
     "GaussianProcess", "ProbabilisticRandomForest",
     "PackedForest", "ForestPlane", "make_forest", "set_forest_backend", "forest_backend",
     "expected_improvement", "rank_aggregate", "aggregate_ranks", "normal_cdf", "score_sources",

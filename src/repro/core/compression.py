@@ -88,8 +88,8 @@ def extract_promising_regions(
 
     region = PromisingRegion(task_id=task.task_id, weight=task_weight, n_good=len(good))
     rng = np.random.default_rng(seed)
-    for o in good:
-        x = space.encode(o.config)
+    X_good = space.encode_many([o.config for o in good])  # one columnar pass
+    for x, o in zip(X_good, good):
         phi = shapley_values(f, x, background, n_permutations=n_permutations, rng=rng)
         v = task_weight * (f_med - o.performance) / f_med  # Eq. 3 weight
         # Eq. 3 keeps values with negative SHAP. We additionally require the

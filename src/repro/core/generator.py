@@ -26,7 +26,7 @@ import numpy as np
 from .acquisition import aggregate_ranks, score_sources
 from .knowledge import TaskRecord
 from .similarity import TaskWeights, surrogate_for_task
-from .space import ConfigSpace
+from .space import ConfigBatch, ConfigSpace
 from .surrogate import Surrogate, make_forest
 
 Config = Dict[str, Any]
@@ -157,6 +157,12 @@ class CandidateGenerator:
         self.backend = backend            # packed-forest backend for fitted surrogates
         self._rng = np.random.default_rng(seed)
         self._store = SurrogateStore(max_entries=cache_entries)
+        # encoded-exclusion cache: recommend is called once per bracket with
+        # the (append-only, heavily overlapping) list of already-evaluated
+        # configs; canonical row keys are cached per config-dict identity so
+        # each config is encoded once per tuning run instead of per call.
+        self._key_cache: Dict[int, bytes] = {}
+        self._key_refs: List[Config] = []  # keeps dicts alive => ids stay valid
 
     def set_sample_space(self, space: ConfigSpace) -> None:
         """Install the compressed space; candidates are sampled from it and
@@ -201,17 +207,26 @@ class CandidateGenerator:
         # is refit, the other fidelity surrogates come from the store
         w_t = weights.weights.get("__target__", 0.0)
         for d in fidelities:
-            obs = target.at_fidelity(d)
-            if len(obs) < 2:
+            all_obs = target.at_fidelity(d, include_failed=True)
+            ok_obs = [o for o in all_obs if not o.failed]
+            if len(ok_obs) < 2:
                 continue
 
-            def build_fid(obs=obs):
-                X = self.space.encode_many([o.config for o in obs])
-                y = np.array([o.performance for o in obs])
+            def build_fid(all_obs=all_obs, ok_obs=ok_obs):
+                # failed evaluations (OOM / early-stop) enter the fit at a
+                # crash-cost penalty instead of being hidden: with log-space
+                # sampling a large pool fraction can sit in the failure
+                # region, and a surrogate that never sees failures keeps
+                # recommending into it (SMAC-style imputation)
+                penalty = 2.0 * max(o.performance for o in ok_obs)
+                X = self.space.encode_many([o.config for o in all_obs])
+                y = np.array(
+                    [penalty if o.failed else o.performance for o in all_obs]
+                )
                 m = make_forest(seed=self.seed, backend=self.backend).fit(X, y)
-                return m, float(y.min())
+                return m, float(min(o.performance for o in ok_obs))
 
-            got = self._store.get(f"fid:{d:.6f}:{target.task_id}", len(obs), build_fid)
+            got = self._store.get(f"fid:{d:.6f}:{target.task_id}", len(all_obs), build_fid)
             if got is None:
                 continue
             # full fidelity of the target carries the target weight; lower
@@ -228,17 +243,46 @@ class CandidateGenerator:
         return sources
 
     # ------------------------------------------------------------- candidates
-    def _candidate_pool(self, incumbents: Sequence[Config]) -> List[Config]:
+    def _candidate_pool(self, incumbents: Sequence[Config]) -> ConfigBatch:
+        """Random samples + incumbent mutations as one columnar batch.
+
+        Sampling and mutation run in the (possibly compressed) sample space;
+        the batch is then lifted into the full space (dropped knobs take
+        full-space defaults) so every candidate is a valid configuration —
+        all without materializing Config dicts.
+        """
         ss = self.sample_space
         n_mut = min(self.pool_size // 4, 16 * max(len(incumbents), 1))
         pool = ss.sample(self._rng, self.pool_size - n_mut if incumbents else self.pool_size)
         if incumbents:
-            for i in range(n_mut):
-                base = incumbents[i % len(incumbents)]
-                pool.append(ss.mutate(ss.project(base), self._rng))
-        # complete dropped knobs with full-space defaults so every candidate
-        # is a valid full configuration
-        return [dict(self.space.default(), **c) for c in pool]
+            bases = ConfigBatch.from_configs(
+                ss, [incumbents[i % len(incumbents)] for i in range(n_mut)]
+            )
+            muts = ss.mutate_many(ss.project_many(bases), self._rng)
+            pool = ConfigBatch.concat([pool, muts])
+        return self.space.complete_batch(pool)
+
+    def _config_keys(self, cfgs: Sequence[Config]) -> List[bytes]:
+        """Canonical row keys for config dicts, cached per dict identity."""
+        out: List[Optional[bytes]] = []
+        missing: List[Config] = []
+        missing_pos: List[int] = []
+        for c in cfgs:
+            k = self._key_cache.get(id(c))
+            if k is None:
+                missing.append(c)
+                missing_pos.append(len(out))
+            out.append(k)
+        if missing:
+            keys = ConfigBatch.from_configs(self.space, missing).row_keys()
+            if len(self._key_refs) > 8192:  # bound memory across long runs
+                self._key_cache.clear()
+                self._key_refs.clear()
+            for c, key, pos in zip(missing, keys, missing_pos):
+                self._key_cache[id(c)] = key
+                self._key_refs.append(c)
+                out[pos] = key
+        return out  # type: ignore[return-value]
 
     def recommend(
         self,
@@ -249,23 +293,24 @@ class CandidateGenerator:
     ) -> List[Config]:
         """Top-n candidates by weighted rank-aggregated EI (§6.2).
 
-        The pool is encoded once; all sources score it in one fused pass
-        (shared packed-forest descent + EI matrix + rank aggregation).
+        The pool stays columnar end-to-end: one unit-cube encoding feeds all
+        sources in a fused pass (shared packed-forest descent + EI matrix +
+        rank aggregation); only the returned top-n materialize as dicts.
         """
         pool = self._candidate_pool(incumbents)
-        # de-duplicate against already-evaluated configs
-        seen = {self._key(c) for c in exclude}
-        pool = [c for c in pool if self._key(c) not in seen] or pool
+        # de-duplicate against already-evaluated configs (exact canonical
+        # row match; the exclusion keys are cached across calls)
+        if len(exclude):
+            seen = set(self._config_keys(exclude))
+            keep = np.array([k not in seen for k in pool.row_keys()], dtype=bool)
+            if keep.any() and not keep.all():
+                pool = pool.take(np.flatnonzero(keep))
         active = [s for s in sources if s.weight > 0]
         if not active:
-            self._rng.shuffle(pool)
-            return pool[:n]
-        X = self.space.encode_many(pool)
+            order = self._rng.permutation(len(pool))
+            return [pool[int(i)] for i in order[:n]]
+        X = pool.unit()
         scores = score_sources([s.model for s in active], X, [s.incumbent for s in active])
         agg = aggregate_ranks(scores, [s.weight for s in active])
         order = np.argsort(agg, kind="stable")
-        return [pool[i] for i in order[:n]]
-
-    @staticmethod
-    def _key(cfg: Config) -> tuple:
-        return tuple(sorted((k, repr(v)) for k, v in cfg.items()))
+        return [pool[int(i)] for i in order[:n]]

@@ -55,8 +55,14 @@ class TaskRecord:
     def full_fidelity(self) -> List[Observation]:
         return [o for o in self.observations if o.fidelity >= 1.0 and not o.failed]
 
-    def at_fidelity(self, delta: float, tol: float = 1e-6) -> List[Observation]:
-        return [o for o in self.observations if abs(o.fidelity - delta) <= tol and not o.failed]
+    def at_fidelity(
+        self, delta: float, tol: float = 1e-6, include_failed: bool = False
+    ) -> List[Observation]:
+        return [
+            o
+            for o in self.observations
+            if abs(o.fidelity - delta) <= tol and (include_failed or not o.failed)
+        ]
 
     def successful(self) -> List[Observation]:
         return [o for o in self.observations if not o.failed]

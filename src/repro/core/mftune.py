@@ -41,7 +41,7 @@ from .generator import CandidateGenerator, WarmStartQueue, phase1_config
 from .hyperband import HyperbandRunner, Rung
 from .knowledge import KnowledgeBase, Observation, TaskRecord
 from .similarity import SimilarityEngine, TaskWeights
-from .space import ConfigSpace
+from .space import ConfigSpace, space_backend as _space_backend_ctx
 
 Config = Dict[str, Any]
 
@@ -68,6 +68,9 @@ class MFTuneOptions:
     surrogate_backend: Optional[str] = None  # packed-forest backend; None = module
                                              # default (see set_forest_backend),
                                              # "loop" = legacy per-tree reference
+    space_backend: Optional[str] = None      # config-space backend; None = module
+                                             # default (see set_space_backend),
+                                             # "scalar" = per-element reference
 
 
 @dataclass
@@ -265,10 +268,18 @@ class MFTune:
         t0 = _time.perf_counter()
         sources = self.kb.same_query_sources(self.target) if self.opt.enable_transfer else []
         stats = collect_query_stats(sources, weights.weights)
-        # degradation: current task as its own source once observations suffice
+        # degradation (§6.3): the current task becomes its own source once
+        # enough of its observations carry query vectors AND its own
+        # surrogate has established out-of-sample rank fidelity (positive
+        # k-fold tau -> a "__target__" weight). The former gate on the
+        # meta/Eq.2 transition deadlocked when history existed but stayed
+        # dissimilar: used_meta never flipped, so self-partition never fired.
         if not stats:
             full = self.target.with_query_vectors()
-            if len(full) >= self.opt.min_target_obs_for_partition and not weights.used_meta:
+            if (
+                len(full) >= self.opt.min_target_obs_for_partition
+                and weights.weights.get("__target__", 0.0) > 0
+            ):
                 stats = collect_query_stats([self.target], {self.target.task_id: 1.0})
         if stats:
             deltas = [d for d in self._deltas if d < 1.0]
@@ -284,6 +295,12 @@ class MFTune:
 
     # ------------------------------------------------------------------ main
     def run(self, budget: Budget) -> TuningResult:
+        if self.opt.space_backend is not None:
+            with _space_backend_ctx(self.opt.space_backend):
+                return self._run(budget)
+        return self._run(budget)
+
+    def _run(self, budget: Budget) -> TuningResult:
         opt = self.opt
         # ---------------- Phase 1 warm start (once, full fidelity)
         weights = self._weights()
@@ -293,12 +310,24 @@ class MFTune:
             if cfg1 is not None and not budget.exhausted:
                 self._evaluate(budget, cfg1, 1.0, None)
 
-        # ---------------- cold-start LHS init if nothing else to go on
+        # ---------------- cold-start init if nothing else to go on
         if not weights.weights and not self.target.full_fidelity():
+            # anchor on the vendor default first: a feasible reference that
+            # floors the result at parity with the default and prices an
+            # early-stop cap for the LHS probes — without it, exploratory
+            # draws (log-geometry sampling reaches deep into the low-memory
+            # OOM region on large inputs) each burn 4x-timeout charges
+            cap = None
+            if not budget.exhausted:
+                _, d_failed, d_cost = self._evaluate(
+                    budget, dict(self.wl.default_config()), 1.0, None
+                )
+                if not d_failed:
+                    cap = opt.early_stop_factor * d_cost
             for cfg in self.space.lhs_sample(self.rng, opt.init_lhs):
                 if budget.exhausted:
                     break
-                self._evaluate(budget, cfg, 1.0, None)
+                self._evaluate(budget, cfg, 1.0, cap)
             weights = self._weights()
 
         # ---------------- iterative tuning

@@ -68,14 +68,26 @@ def surrogate_for_task(
 
 
 def eq2_similarity(
-    space: ConfigSpace, source_model: Surrogate, target: TaskRecord
+    space: ConfigSpace,
+    source_model: Surrogate,
+    target: TaskRecord,
+    target_Xy: Optional[Tuple[np.ndarray, np.ndarray]] = None,
 ) -> Tuple[float, float]:
-    """S(i,T) = KendallTau^{D_T}(M_i, Y)  (Eq. 2). Returns (tau, p)."""
-    obs = target.full_fidelity()
-    if len(obs) < 3:
-        return 0.0, 1.0
-    X = space.encode_many([o.config for o in obs])
-    y = np.array([o.performance for o in obs])
+    """S(i,T) = KendallTau^{D_T}(M_i, Y)  (Eq. 2). Returns (tau, p).
+
+    ``target_Xy`` lets callers that score many sources against the same
+    target encode the target observations once (see SimilarityEngine).
+    """
+    if target_Xy is None:
+        obs = target.full_fidelity()
+        if len(obs) < 3:
+            return 0.0, 1.0
+        X = space.encode_many([o.config for o in obs])
+        y = np.array([o.performance for o in obs])
+    else:
+        X, y = target_Xy
+        if len(y) < 3:
+            return 0.0, 1.0
     pred = source_model.predict_mean(X)
     return kendall_tau(pred, y)
 
@@ -207,11 +219,19 @@ class SimilarityEngine:
         sources = self.kb.source_tasks(target.task_id)
         sims: Dict[str, float] = {}
         pvals: Dict[str, float] = {}
+        # encode the target's observations once; every source model scores
+        # the same matrix (the per-source re-encode was a per-knob loop)
+        obs = target.full_fidelity()
+        target_Xy = (
+            (self.space.encode_many([o.config for o in obs]),
+             np.array([o.performance for o in obs]))
+            if len(obs) >= 3 else None
+        )
         for s in sources:
             m = self.source_model(s.task_id)
             if m is None:
                 continue
-            tau, p = eq2_similarity(self.space, m, target)
+            tau, p = eq2_similarity(self.space, m, target, target_Xy=target_Xy)
             sims[s.task_id] = tau
             pvals[s.task_id] = p
 

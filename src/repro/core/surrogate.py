@@ -21,6 +21,15 @@ has jax and pallas backends (``repro.kernels.forest_eval``); all backends
 route points to identical leaves, so (mean, var) agree bit-for-bit with the
 legacy loop, which is kept as ``predict_loop`` for equivalence tests.
 
+Fitting mirrors inference: on every packed backend trees grow through a
+*level-synchronous frontier builder* (one vectorized best-split scan over
+all active nodes per depth, against a shared presorted feature order) that
+feeds ``pack()`` directly; the ``"loop"`` backend keeps the legacy
+node-by-node recursion. Per-node feature subsets come from a
+traversal-order-independent seed chain and the split arithmetic replays the
+recursion's exact op sequence, so both builders produce bit-identical
+trees — backend choice never changes a fitted forest.
+
 The default path is pure numpy; data sets here are O(10^2-10^3) points.
 """
 
@@ -77,8 +86,33 @@ class _Node:
     n: int = 0
 
 
+_MASK64 = (1 << 64) - 1
+
+
+def _child_seed(seed: int, right: int) -> int:
+    """Traversal-order-independent per-node seed chain (splitmix64-style).
+
+    Both tree builders derive each node's feature-subset RNG from this
+    chain, so the recursive (depth-first) and frontier (level-synchronous)
+    builders draw identical subsets regardless of node processing order.
+    """
+    z = (seed + 0x9E3779B97F4A7C15 * (right + 1)) & _MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return (z ^ (z >> 31)) & ((1 << 63) - 1)
+
+
 class RegressionTree:
-    """CART regression tree with random feature subsetting at each split."""
+    """CART regression tree with random feature subsetting at each split.
+
+    Two equivalent builders: ``"frontier"`` (default) grows the tree one
+    *level* at a time — a vectorized best-split scan over all active nodes
+    per depth against a shared presorted feature order — while
+    ``"recursive"`` is the legacy node-by-node Python recursion kept as the
+    equivalence reference. Both consume the per-node seed chain and compute
+    split SSEs with the identical op sequence (padded per-node row cumsums),
+    so they produce bit-identical trees.
+    """
 
     def __init__(
         self,
@@ -87,39 +121,58 @@ class RegressionTree:
         min_samples_leaf: int = 2,
         max_features: Optional[int] = None,
         rng: Optional[np.random.Generator] = None,
+        builder: str = "frontier",
     ):
         self.max_depth = max_depth
         self.min_samples_split = min_samples_split
         self.min_samples_leaf = min_samples_leaf
         self.max_features = max_features
         self.rng = rng or np.random.default_rng()
+        if builder not in ("frontier", "recursive"):
+            raise ValueError(f"unknown tree builder {builder!r}")
+        self.builder = builder
         self.nodes: List[_Node] = []
+
+    def _n_features(self, d: int) -> int:
+        k = self.max_features or max(1, int(np.ceil(d / 1.5)))
+        return min(k, d)
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "RegressionTree":
         X = np.asarray(X, dtype=float)
         y = np.asarray(y, dtype=float)
         self.nodes = []
-        self._build(X, y, np.arange(len(y)), 0)
+        root_seed = int(self.rng.integers(2**63))
+        if self.builder == "recursive":
+            self._build(X, y, np.arange(len(y)), 0, root_seed)
+        else:
+            self._build_frontier(X, y, root_seed)
         self._freeze()
         return self
 
-    def _new_node(self) -> int:
-        self.nodes.append(_Node())
+    def _new_node(self, ysub: np.ndarray) -> int:
+        node = _Node()
+        # raw ufunc reduces replay numpy's _mean/_var op sequence (pairwise
+        # umr_sum, then the same subtract/square/divide) without the method
+        # dispatch overhead — bit-identical to ysub.mean()/ysub.var(), which
+        # dominates per-node cost in both builders
+        n = len(ysub)
+        m = np.add.reduce(ysub) / n
+        dev = ysub - m
+        node.mean = float(m)
+        node.var = float(np.add.reduce(dev * dev) / n)
+        node.n = n
+        self.nodes.append(node)
         return len(self.nodes) - 1
 
-    def _build(self, X: np.ndarray, y: np.ndarray, idx: np.ndarray, depth: int) -> int:
-        nid = self._new_node()
+    def _build(self, X: np.ndarray, y: np.ndarray, idx: np.ndarray, depth: int, seed: int) -> int:
+        nid = self._new_node(y[idx])
         node = self.nodes[nid]
         ysub = y[idx]
-        node.mean = float(ysub.mean())
-        node.var = float(ysub.var())
-        node.n = len(idx)
         if depth >= self.max_depth or len(idx) < self.min_samples_split or np.ptp(ysub) == 0:
             return nid
         d = X.shape[1]
-        k = self.max_features or max(1, int(np.ceil(d / 1.5)))
-        feats = self.rng.permutation(d)[: min(k, d)]
-        best = None  # (score, feat, thr, mask)
+        feats = np.random.default_rng(seed).permutation(d)[: self._n_features(d)]
+        best = None  # (score, feat, thr)
         for f in feats:
             xs = X[idx, f]
             order = np.argsort(xs, kind="stable")
@@ -155,9 +208,142 @@ class RegressionTree:
             return nid
         node.feature = f
         node.threshold = thr
-        node.left = self._build(X, y, li, depth + 1)
-        node.right = self._build(X, y, ri, depth + 1)
+        node.left = self._build(X, y, li, depth + 1, _child_seed(seed, 0))
+        node.right = self._build(X, y, ri, depth + 1, _child_seed(seed, 1))
         return nid
+
+    def _build_frontier(self, X: np.ndarray, y: np.ndarray, root_seed: int) -> None:
+        """Level-synchronous builder: one vectorized split scan per depth.
+
+        Per level, the samples of every splittable node are grouped (via one
+        stable argsort against the shared presorted feature order) into
+        padded (node, position) matrices, and the SSE of every candidate
+        split of every node is computed in a few whole-frontier array ops.
+        Per-node Python work shrinks to the feature-subset draw and the
+        child bookkeeping. Arithmetic is arranged to be bit-identical to the
+        recursion: padded rows reproduce each node's own cumsum sequence,
+        and argmins keep the recursion's first-strict-min tie-breaking.
+        """
+        n, d = X.shape
+        k = self._n_features(d)
+        msl = self.min_samples_leaf
+        mss = self.min_samples_split
+        sorted_mat = np.argsort(X, axis=0, kind="stable") if n else np.zeros((0, d), np.int64)
+        root_idx = np.arange(n)
+        self._new_node(y[root_idx])
+        # frontier entries: (nid, idx, seed, splittable) — the splittable
+        # flag (count and ptp gates, same booleans as the recursion's) is
+        # computed when the node is created, from the y-gather it needs
+        # anyway, so the level filter does no per-node array work
+        root_ok = bool(
+            n >= mss and n > 0 and np.maximum.reduce(y) != np.minimum.reduce(y)
+        )
+        frontier: List[Tuple[int, np.ndarray, int, bool]] = [(0, root_idx, root_seed, root_ok)]
+        level = 0
+        cols = np.arange(d)
+        # one errstate for the whole build (padded lanes divide by zero
+        # before they are masked invalid) instead of one context per level
+        with np.errstate(divide="ignore", invalid="ignore"):
+            self._frontier_levels(X, y, frontier, sorted_mat, cols, k, msl, mss, level)
+
+    def _frontier_levels(self, X, y, frontier, sorted_mat, cols, k, msl, mss, level) -> None:
+        n, d = X.shape
+        while frontier and level < self.max_depth:
+            active = [t for t in frontier if t[3]]
+            if not active:
+                break
+            W = len(active)
+            counts = np.array([len(t[1]) for t in active], dtype=np.int64)
+            M = int(counts.max())
+            n_act = int(counts.sum())
+            starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            slot_rep = np.repeat(np.arange(W), counts)
+            cat = np.concatenate([t[1] for t in active])  # node-order sample ids
+            # group every feature column by node in ONE stable argsort of the
+            # (n, d) slot matrix: inactive samples carry sentinel W and sink
+            # to the bottom; ties (same node) keep the presorted x-order
+            slot_of = np.full(n, W, dtype=np.int64)
+            slot_of[cat] = slot_rep
+            gorder = np.argsort(slot_of[sorted_mat], axis=0, kind="stable")[:n_act]
+            gidx = sorted_mat[gorder, cols[None, :]]  # (n_act, d)
+            rowpos = np.arange(n_act) - starts[slot_rep]
+            best_sse = np.full((W, d), np.inf)
+            best_thr = np.zeros((W, d))
+            # padded (node, position, feature) blocks: each (w, :, f) lane is
+            # that node's feature-sorted value/target sequence, so the lane
+            # cumsums replay the recursion's per-node cumsum bit-for-bit;
+            # scatter by flat row index (node * M + position)
+            dst = slot_rep * M + rowpos
+            xs3 = np.zeros((W * M, d))
+            ys3 = np.zeros((W * M, d))
+            xs3[dst] = X[gidx, cols[None, :]]
+            ys3[dst] = y[gidx]
+            xs3 = xs3.reshape(W, M, d)
+            ys3 = ys3.reshape(W, M, d)
+            if M > 1:
+                rows = np.arange(W)[:, None]
+                pos = np.arange(1, M)
+                nl = pos.astype(float)[None, :, None]
+                cs = np.cumsum(ys3, axis=1)
+                cs2 = np.cumsum(ys3**2, axis=1)
+                sl = cs[:, :-1, :]
+                s2l = cs2[:, :-1, :]
+                tot = cs[rows[:, 0], counts - 1, :][:, None, :]
+                tot2 = cs2[rows[:, 0], counts - 1, :][:, None, :]
+                nr = counts[:, None, None] - nl
+                sse = (s2l - sl**2 / nl) + ((tot2 - s2l) - (tot - sl) ** 2 / nr)
+                valid = (
+                    (pos[None, :, None] >= max(msl, 1))
+                    & (pos[None, :, None] <= (counts[:, None] - max(msl, 1))[:, :, None])
+                    & (xs3[:, :-1, :] < xs3[:, 1:, :])
+                )
+                sse = np.where(valid, sse, np.inf)
+                j = np.argmin(sse, axis=1)  # (W, d): first minimum per lane
+                # pos = arange(1, M), so lane argmin j maps to split position
+                # j + 1; direct fancy gathers replace take_along_axis
+                best_sse = sse[rows, j, cols[None, :]]
+                bp = j + 1
+                best_thr = 0.5 * (xs3[rows, bp - 1, cols[None, :]] + xs3[rows, bp, cols[None, :]])
+            # whole-frontier feature pick + child masks: per-node work drops
+            # to the seed-chain permutation draw (bit-identity with the
+            # recursion pins it to one default_rng per node) and the child
+            # bookkeeping; argmin over the perm gather keeps the recursion's
+            # first-strict-min tie-breaking across features
+            rows_w = np.arange(W)
+            # Generator(PCG64(seed)) == default_rng(seed) stream, minus the
+            # dispatch overhead — the recursion's exact permutations
+            _gen, _pcg = np.random.Generator, np.random.PCG64
+            P = np.stack([_gen(_pcg(t[2])).permutation(d)[:k] for t in active])
+            FS = best_sse[rows_w[:, None], P]
+            R = np.argmin(FS, axis=1)
+            F = P[rows_w, R]
+            split_ok = np.isfinite(FS[rows_w, R])
+            THR = best_thr[rows_w, F]
+            mask_flat = X[cat, np.repeat(F, counts)] <= np.repeat(THR, counts)
+            next_frontier: List[Tuple[int, np.ndarray, int, bool]] = []
+            for s in np.flatnonzero(split_ok):
+                nid, idx, seed, _ = active[s]
+                a = starts[s]
+                m = mask_flat[a : a + counts[s]]
+                li, ri = idx[m], idx[~m]
+                if len(li) < msl or len(ri) < msl:
+                    continue
+                node = self.nodes[nid]
+                node.feature = int(F[s])
+                node.threshold = float(THR[s])
+                yl, yr = y[li], y[ri]
+                node.left = self._new_node(yl)
+                node.right = self._new_node(yr)
+                next_frontier.append((
+                    node.left, li, _child_seed(seed, 0),
+                    len(li) >= mss and np.maximum.reduce(yl) != np.minimum.reduce(yl),
+                ))
+                next_frontier.append((
+                    node.right, ri, _child_seed(seed, 1),
+                    len(ri) >= mss and np.maximum.reduce(yr) != np.minimum.reduce(yr),
+                ))
+            frontier = next_frontier
+            level += 1
 
     def _freeze(self) -> None:
         """Pack nodes into arrays for vectorized descent."""
@@ -435,6 +621,10 @@ class ProbabilisticRandomForest(Surrogate):
         self.trees = []
         self._packed = None
         n = len(y)
+        # "loop" pins the legacy recursive builder along with the per-tree
+        # predict loop; every packed backend fits via the level-synchronous
+        # frontier builder (bit-identical trees either way).
+        builder = "recursive" if self.backend == "loop" else "frontier"
         for t in range(self.n_trees):
             trng = np.random.default_rng(rng.integers(2**63))
             idx = trng.integers(0, n, n) if (self.bootstrap and n > 1) else np.arange(n)
@@ -443,6 +633,7 @@ class ProbabilisticRandomForest(Surrogate):
                 min_samples_split=self.min_samples_split,
                 min_samples_leaf=self.min_samples_leaf,
                 rng=trng,
+                builder=builder,
             )
             tree.fit(X[idx], yn[idx])
             self.trees.append(tree)

@@ -87,8 +87,10 @@ def generate_history(
             X = space.encode_many([o.config for o in ok])
             y = np.array([o.performance for o in ok])
             model = make_forest(seed=seed).fit(X, y)
+            # columnar pool: sampled, encoded and scored without dicts;
+            # only the EI winner materializes for evaluation
             pool = space.sample(rng, 192)
-            scores = ei_scores(model, space.encode_many(pool), float(y.min()))
+            scores = ei_scores(model, pool.unit(), float(y.min()))
             cfg = pool[int(np.argmax(scores))]
         else:
             cfg = space.sample(rng, 1)[0]

@@ -85,9 +85,14 @@ def test_latency_positive_fuzz():
 
 def test_data_volume_proxy_decorrelates(wl):
     """Fig. 1b structure: tiny data fractions must rank configs worse than
-    the full-data ranking ranks itself (tau(DV 4%) substantially < 1)."""
+    the full-data ranking ranks itself (tau(DV 4%) substantially < 1).
+
+    48 samples: log-space sampling of the memory knobs sends more configs
+    into the OOM region, so a larger pool keeps the surviving-config tau
+    estimate stable.
+    """
     rng = np.random.default_rng(0)
-    cfgs = [c for c in wl.space.sample(rng, 30)]
+    cfgs = [c for c in wl.space.sample(rng, 48)]
     full, tiny = [], []
     for c in cfgs:
         rf = wl.evaluate(c)

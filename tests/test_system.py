@@ -16,7 +16,11 @@ def mini_kb():
     return kb
 
 
-def _run(kb, hours=24, **opts):
+def _run(kb, hours=144, **opts):
+    # 144 simulated hours: log-space sampling of the memory/parallelism
+    # knobs makes random 600GB configs slower (and more OOM-prone) than the
+    # old raw-unit draws, so the tuner needs a bigger simulated budget to
+    # accumulate the observations that activate MFO.
     wl = SparkWorkload("tpch", 600, "A")
     tuner = MFTune(wl, kb, MFTuneOptions(seed=0, **opts))
     return tuner.run(Budget(hours * 3600.0))
@@ -36,8 +40,8 @@ def test_mftune_end_to_end(mini_kb):
 
 @pytest.mark.slow
 def test_mftune_multifidelity_explores_more(mini_kb):
-    mf = _run(mini_kb, hours=24)
-    sf = _run(mini_kb, hours=24, enable_mfo=False)
+    mf = _run(mini_kb, hours=144)
+    sf = _run(mini_kb, hours=144, enable_mfo=False)
     # the Fig. 1a phenomenon: MFO evaluates more configurations in-budget
     assert mf.n_evaluations > sf.n_evaluations
     assert sf.n_evaluations == sf.n_full_evaluations

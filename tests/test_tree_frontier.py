@@ -1,0 +1,145 @@
+"""Frontier (level-synchronous) vs recursive tree-builder equivalence.
+
+The frontier builder must reproduce the recursive reference *bit-for-bit*:
+identical per-node feature subsets (traversal-order-independent seed
+chain), identical split choices and thresholds (padded-row cumsums replay
+the recursion's exact float op sequence, argmins keep its first-strict-min
+tie-breaking), identical leaf statistics. Node numbering differs (BFS vs
+preorder DFS), so trees are compared in canonical DFS order.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import make_forest
+from repro.core.surrogate import RegressionTree
+
+
+def _dfs(tree):
+    """Canonical preorder-DFS flattening, numbering-independent."""
+    out = []
+
+    def rec(i):
+        nd = tree.nodes[i]
+        out.append((nd.feature, nd.threshold, nd.mean, nd.var, nd.n))
+        if nd.feature >= 0:
+            rec(nd.left)
+            rec(nd.right)
+
+    rec(0)
+    return out
+
+
+def _fit_pair(X, y, seed, **kw):
+    t_rec = RegressionTree(rng=np.random.default_rng(seed), builder="recursive", **kw).fit(X, y)
+    t_fro = RegressionTree(rng=np.random.default_rng(seed), builder="frontier", **kw).fit(X, y)
+    return t_rec, t_fro
+
+
+def _check_identical(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 220))
+    d = int(rng.integers(2, 14))
+    X = rng.random((n, d))
+    y = 3 * X[:, 0] - X[:, 1 % d] ** 2 + 0.1 * rng.normal(size=n)
+    if seed % 3 == 0:
+        X[:, 0] = np.round(X[:, 0] * 5) / 5       # tied feature values
+    if seed % 4 == 0:
+        idx = rng.integers(0, n, n)               # bootstrap-style duplicates
+        X, y = X[idx], y[idx]
+    msl = int(rng.integers(1, 3))
+    t_rec, t_fro = _fit_pair(X, y, seed + 1, min_samples_leaf=msl, min_samples_split=4)
+    assert _dfs(t_rec) == _dfs(t_fro)
+    Xq = rng.random((32, d))
+    m1, v1 = t_rec.predict(Xq)
+    m2, v2 = t_fro.predict(Xq)
+    assert np.array_equal(m1, m2) and np.array_equal(v1, v2)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 17, 42, 123, 999, 2024, 31337])
+def test_frontier_matches_recursive_bitwise(seed):
+    _check_identical(seed)
+
+
+def test_frontier_matches_recursive_fuzz():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    settings(max_examples=20, deadline=None)(
+        given(st.integers(0, 2**31 - 1))(_check_identical)
+    )()
+
+
+def test_forest_identical_across_builders():
+    """make_forest backend selects the builder ("loop" => recursive); the
+    fitted forests must still be identical, so backend choice never changes
+    predictions."""
+    rng = np.random.default_rng(0)
+    X, y = rng.random((60, 8)), rng.random(60)
+    f_loop = make_forest(seed=3, backend="loop").fit(X, y)
+    f_pack = make_forest(seed=3, backend="numpy").fit(X, y)
+    for t1, t2 in zip(f_loop.trees, f_pack.trees):
+        assert _dfs(t1) == _dfs(t2)
+    Xq = rng.random((48, 8))
+    assert all(np.array_equal(a, b) for a, b in zip(f_loop.predict(Xq), f_pack.predict(Xq)))
+
+
+@pytest.mark.parametrize("seed", [0, 5, 77, 4096])
+def test_frontier_split_is_sse_optimal(seed):
+    """Root split of the frontier builder is SSE-optimal vs brute force."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 28))
+    d = 3
+    X = rng.random((n, d))
+    y = rng.random(n)
+    msl = 2
+    tree = RegressionTree(
+        max_depth=1, min_samples_split=2, min_samples_leaf=msl, max_features=d,
+        rng=np.random.default_rng(seed + 1), builder="frontier",
+    ).fit(X, y)
+    best_sse = np.inf
+    for f in range(d):
+        order = np.argsort(X[:, f], kind="stable")
+        xs, ys = X[order, f], y[order]
+        for p in range(msl, n - msl + 1):
+            if not xs[p - 1] < xs[p]:
+                continue
+            left, right = ys[:p], ys[p:]
+            sse = ((left - left.mean()) ** 2).sum() + ((right - right.mean()) ** 2).sum()
+            best_sse = min(best_sse, sse)
+    root = tree.nodes[0]
+    assert root.feature >= 0
+    mask = X[:, root.feature] <= root.threshold
+    left, right = y[mask], y[~mask]
+    assert len(left) >= msl and len(right) >= msl
+    got = ((left - left.mean()) ** 2).sum() + ((right - right.mean()) ** 2).sum()
+    assert got <= best_sse + 1e-9
+
+
+def test_degenerate_inputs_stay_leaves():
+    for builder in ("recursive", "frontier"):
+        # constant target: no split possible
+        t = RegressionTree(rng=np.random.default_rng(0), builder=builder).fit(
+            np.random.default_rng(1).random((12, 3)), np.ones(12)
+        )
+        assert len(t.nodes) == 1 and t.nodes[0].feature == -1
+        # below min_samples_split
+        t = RegressionTree(
+            min_samples_split=8, rng=np.random.default_rng(0), builder=builder
+        ).fit(np.random.default_rng(1).random((4, 2)), np.arange(4.0))
+        assert len(t.nodes) == 1
+        # max_depth=0
+        t = RegressionTree(max_depth=0, rng=np.random.default_rng(0), builder=builder).fit(
+            np.random.default_rng(1).random((20, 2)), np.random.default_rng(2).random(20)
+        )
+        assert len(t.nodes) == 1
+        # single sample
+        t = RegressionTree(rng=np.random.default_rng(0), builder=builder).fit(
+            np.ones((1, 2)), np.array([2.0])
+        )
+        assert len(t.nodes) == 1 and t.nodes[0].mean == 2.0
+
+
+def test_unknown_builder_rejected():
+    with pytest.raises(ValueError):
+        RegressionTree(builder="iterative")
