@@ -1,0 +1,158 @@
+"""Compression-path throughput: batched Shapley plane vs per-chain loop.
+
+The §5.1 attribution bottleneck this PR attacks: explaining a promising set
+of 32 configs at d=24 with 32 antithetic permutations against a 16-row
+background is 1024 chains x 25 prefixes x 16 background rows — the legacy
+path made one surrogate call per chain; the batched plane builds the whole
+composite tensor and pushes it through the packed forest in a few chunked
+calls. Both backends consume the same pre-drawn permutations and are
+gated bit-identical before timing. Also reports cold/warm
+``SpaceCompressor.compress`` latency (region + KDE alpha-mass caches) and
+PRF fit throughput under the vectorized splitmix64 seed derivation; the
+cached JSON under results/bench/ is the baseline later PRs track.
+
+``--smoke`` (or REPRO_BENCH_SMOKE=1) runs 1 repetition for CI.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import cached
+
+D = 24            # knobs
+N_CONFIGS = 32    # promising set size (extract's max_configs)
+N_PERMS = 32
+N_BG = 16
+N_OBS = 96
+REPEATS = 5
+
+
+def _best(fn, repeats: int) -> float:
+    fn()  # warm up (pack, caches, numpy dispatch)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _run():
+    from repro.core import (
+        ConfigSpace,
+        FloatKnob,
+        Observation,
+        SpaceCompressor,
+        TaskRecord,
+        make_forest,
+        shapley_values_batch,
+    )
+    from repro.core.similarity import TaskWeights
+
+    repeats = 1 if os.environ.get("REPRO_BENCH_SMOKE") == "1" else REPEATS
+    rng = np.random.default_rng(0)
+
+    # PRF surrogate over a synthetic latency surface
+    Xt = rng.random((N_OBS, D))
+    yt = 3 * Xt[:, 0] - Xt[:, 1] ** 2 + 0.5 * Xt[:, 2] + 0.1 * rng.normal(size=N_OBS)
+    forest = make_forest(seed=0).fit(Xt, yt)
+    f = forest.predict_mean
+
+    X = rng.random((N_CONFIGS, D))
+    background = rng.random((N_BG, D))
+
+    def explain(backend, model=None):
+        return shapley_values_batch(
+            f, X, background, n_permutations=N_PERMS,
+            rng=np.random.default_rng(7), backend=backend, model=model,
+        )
+
+    # bit-identity gate before timing: shared permutation draw protocol,
+    # across the per-chain loop, the generic composite-tensor plane, and
+    # the bitvector chain kernel (model= opt-in)
+    phi_loop = explain("loop")
+    assert np.array_equal(phi_loop, explain("batched")), "composite plane diverged"
+    assert np.array_equal(phi_loop, explain("batched", forest)), "chain kernel diverged"
+
+    t_loop = _best(lambda: explain("loop"), repeats)
+    t_plane = _best(lambda: explain("batched"), repeats)
+    t_bat = _best(lambda: explain("batched", forest), repeats)
+    chains = N_CONFIGS * N_PERMS
+    rows = [
+        {
+            "name": f"shapley_loop_d{D}_p{N_PERMS}_b{N_BG}",
+            "us_per_call": t_loop * 1e6,
+            "derived": f"per-chain loop; {chains} chains; {N_CONFIGS / t_loop:.0f} cfg/s",
+        },
+        {
+            "name": f"shapley_plane_d{D}_p{N_PERMS}_b{N_BG}",
+            "us_per_call": t_plane * 1e6,
+            "derived": f"composite tensor via f; speedup {t_loop / t_plane:.1f}x vs loop (bit-identical)",
+        },
+        {
+            "name": f"shapley_batched_d{D}_p{N_PERMS}_b{N_BG}",
+            "us_per_call": t_bat * 1e6,
+            "derived": f"bitvector chain kernel; speedup {t_loop / t_bat:.1f}x vs loop (bit-identical)",
+        },
+    ]
+
+    # cold vs warm space compression: cold pays region extraction (Shapley)
+    # plus KDE alpha-mass fits; warm re-serves both caches
+    space = ConfigSpace([FloatKnob(f"k{i}", 0.0, 1.0) for i in range(D)])
+    tasks = {}
+    for s in range(4):
+        r = np.random.default_rng(100 + s)
+        rec = TaskRecord(task_id=f"s{s}", queries=["q"])
+        for cfg in space.sample(r, 48):
+            z = space.encode_many([cfg])[0]
+            perf = float(2.0 + 3 * z[0] - z[1] ** 2 + 0.05 * r.normal())
+            rec.observations.append(Observation(config=cfg, performance=perf, fidelity=1.0))
+        tasks[f"s{s}"] = rec
+    weights = TaskWeights(weights={k: 0.25 for k in tasks}, similarities={}, used_meta=False)
+
+    def compress_cold():
+        return SpaceCompressor(space, seed=0).compress(weights, tasks)
+
+    comp_warm = SpaceCompressor(space, seed=0)
+    comp_warm.compress(weights, tasks)
+
+    def compress_warm():
+        return comp_warm.compress(weights, tasks)
+
+    t_cold = _best(compress_cold, max(1, repeats // 2))
+    t_warm = _best(compress_warm, repeats)
+    rows.append({
+        "name": f"compress_cold_{len(tasks)}task_d{D}",
+        "us_per_call": t_cold * 1e6,
+        "derived": "region extraction + KDE fits from scratch",
+    })
+    rows.append({
+        "name": f"compress_warm_{len(tasks)}task_d{D}",
+        "us_per_call": t_warm * 1e6,
+        "derived": f"region + alpha-mass caches hot; speedup {t_cold / t_warm:.1f}x vs cold",
+    })
+
+    # PRF fit throughput under the vectorized splitmix64 seed/subset derivation
+    t_fit = _best(lambda: make_forest(seed=0).fit(Xt, yt), repeats)
+    rows.append({
+        "name": f"prf_fit_{N_OBS}obs_d{D}",
+        "us_per_call": t_fit * 1e6,
+        "derived": f"{forest.n_trees} trees; {forest.n_trees / t_fit:.0f} trees/s",
+    })
+    return rows
+
+
+def run(force: bool = False):
+    return cached("compression", force, _run)
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    for r in run(force=True):
+        print(r)

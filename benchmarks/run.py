@@ -27,6 +27,7 @@ BENCHES = [
     ("batch_eval", "bench_batch_eval"),                 # batched engine (ours)
     ("surrogate", "bench_surrogate"),                   # packed forest plane (ours)
     ("config_space", "bench_config_space"),             # columnar space plane (ours)
+    ("compression", "bench_compression"),               # batched Shapley plane (ours)
 ]
 
 

@@ -44,7 +44,7 @@ from .acquisition import (
 )
 from .gbm import GradientBoostedTrees
 from .kde import WeightedKDE, alpha_mass_categories, alpha_mass_region, silverman_bandwidth
-from .shapley import shapley_values, shapley_values_exact
+from .shapley import draw_permutations, shapley_values, shapley_values_batch, shapley_values_exact
 from .knowledge import KnowledgeBase, Observation, TaskRecord
 from .similarity import SimilarityEngine, TaskWeights, kendall_tau, surrogate_for_task
 from .compression import SpaceCompressor, compress_space, extract_promising_regions
@@ -69,7 +69,7 @@ __all__ = [
     "expected_improvement", "rank_aggregate", "aggregate_ranks", "normal_cdf", "score_sources",
     "GradientBoostedTrees",
     "WeightedKDE", "alpha_mass_categories", "alpha_mass_region", "silverman_bandwidth",
-    "shapley_values", "shapley_values_exact",
+    "draw_permutations", "shapley_values", "shapley_values_batch", "shapley_values_exact",
     "KnowledgeBase", "Observation", "TaskRecord",
     "SimilarityEngine", "TaskWeights", "kendall_tau", "surrogate_for_task",
     "SpaceCompressor", "compress_space", "extract_promising_regions",

@@ -16,6 +16,7 @@ The compressed space adapts every iteration as similarities sharpen.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -23,7 +24,7 @@ import numpy as np
 
 from .kde import WeightedKDE, alpha_mass_categories, alpha_mass_region
 from .knowledge import TaskRecord
-from .shapley import shapley_values
+from .shapley import shapley_values_batch
 from .similarity import TaskWeights, surrogate_for_task
 from .space import BoolKnob, CatKnob, ConfigSpace, FloatKnob, IntKnob, Intervals
 
@@ -62,8 +63,14 @@ def extract_promising_regions(
     seed: int = 0,
     n_permutations: int = 16,
     max_configs: int = 32,
+    backend: str = "batched",
 ) -> Optional[PromisingRegion]:
-    """§5.1 for one source task (or the target acting as its own source)."""
+    """§5.1 for one source task (or the target acting as its own source).
+
+    All promising configs are explained in one batched masked-evaluation
+    pass (``shapley_values_batch``); ``backend="loop"`` pins the legacy
+    per-chain path, bit-identical under the shared permutation draws.
+    """
     obs = task.full_fidelity()
     if len(obs) < 4:
         return None
@@ -81,28 +88,40 @@ def extract_promising_regions(
     if model is None:
         return None
     X_all = space.encode_many([o.config for o in obs])
-    # interventional background = subsample of observed configs (cost control)
-    bg_rng = np.random.default_rng(seed)
+    # independent child streams for the background subsample and the Shapley
+    # permutation draws — seeding both with the raw `seed` made them the
+    # *same* stream, coupling the background choice to the permutations
+    bg_seed, perm_seed = np.random.SeedSequence(seed).spawn(2)
+    bg_rng = np.random.default_rng(bg_seed)
     background = X_all if len(X_all) <= 16 else X_all[bg_rng.choice(len(X_all), 16, replace=False)]
     f = lambda Z: model.predict_mean(Z)
 
     region = PromisingRegion(task_id=task.task_id, weight=task_weight, n_good=len(good))
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(perm_seed)
     X_good = space.encode_many([o.config for o in good])  # one columnar pass
-    for x, o in zip(X_good, good):
-        phi = shapley_values(f, x, background, n_permutations=n_permutations, rng=rng)
+    phis = shapley_values_batch(
+        f, X_good, background, n_permutations=n_permutations, rng=rng,
+        backend=backend, model=model,
+    )
+    # Eq. 3 keeps values with negative SHAP. We additionally require the
+    # attribution to clear a noise floor (5% of the config's largest
+    # |phi|): irrelevant knobs fluctuate around +-eps and would otherwise
+    # never be dropped by the majority-empty rule (DESIGN.md §9). Note the
+    # proportional residual correction in `shapley_values` keeps a knob the
+    # surrogate ignores at phi == 0.0 exactly (the old uniform resid/d
+    # spread pushed such knobs past this floor and let them dodge the
+    # majority-empty drop rule).
+    abs_phis = np.abs(phis)
+    thrs = np.where(abs_phis.max(axis=1) > 0, 0.05 * abs_phis.max(axis=1), 0.0)
+    names = [k.name for k in space.knobs]
+    region.importance = dict(zip(names, abs_phis.sum(axis=0).astype(float)))
+    for phi, thr, o in zip(phis, thrs, good):
         v = task_weight * (f_med - o.performance) / f_med  # Eq. 3 weight
-        # Eq. 3 keeps values with negative SHAP. We additionally require the
-        # attribution to clear a noise floor (5% of the config's largest
-        # |phi|): irrelevant knobs fluctuate around +-eps and would otherwise
-        # never be dropped by the majority-empty rule (DESIGN.md §9).
-        thr = 0.05 * float(np.abs(phi).max()) if np.abs(phi).max() > 0 else 0.0
-        for j, knob in enumerate(space.knobs):
-            region.importance[knob.name] = region.importance.get(knob.name, 0.0) + abs(float(phi[j]))
-            if phi[j] < -thr:  # this knob value significantly reduced latency
-                region.values.setdefault(knob.name, []).append(
-                    (o.config.get(knob.name, knob.default_value()), float(v))
-                )
+        for j in np.flatnonzero(phi < -thr):  # value significantly reduced latency
+            knob = space.knobs[j]
+            region.values.setdefault(knob.name, []).append(
+                (o.config.get(knob.name, knob.default_value()), float(v))
+            )
     # ensure every knob key exists (possibly empty) so the drop rule sees it
     for knob in space.knobs:
         region.values.setdefault(knob.name, [])
@@ -115,8 +134,16 @@ def compress_space(
     alpha: float = 0.65,
     drop_threshold: float = 0.5,
     min_points_for_kde: int = 3,
+    range_cache: Optional["OrderedDict"] = None,
 ) -> ConfigSpace:
-    """§5.2: knob drop rule + KDE range compression -> new ConfigSpace."""
+    """§5.2: knob drop rule + KDE range compression -> new ConfigSpace.
+
+    ``range_cache`` (an OrderedDict managed by :class:`SpaceCompressor`)
+    memoizes the per-knob KDE fit + alpha-mass region keyed by the exact
+    (knob, alpha, promising pairs) fingerprint: source-task regions are
+    frozen and task weights are stable between weight refreshes, so
+    successive compression calls mostly re-derive identical unions.
+    """
     if not regions:
         return space
     total_w = sum(r.weight for r in regions)
@@ -142,17 +169,43 @@ def compress_space(
         vals = [p[0] for p in pairs]
         wts = [max(p[1], 1e-9) for p in pairs]
 
+        key = None
+        if range_cache is not None:
+            key = (knob.name, float(alpha), tuple(vals), tuple(wts))
+            hit = range_cache.get(key)
+            if hit is not None:
+                range_cache.move_to_end(key)
+                kind, payload = hit
+                if kind == "range":
+                    ranges[knob.name] = payload
+                elif kind == "cats":
+                    cat_subsets[knob.name] = payload
+                continue  # "skip" payloads re-derive nothing
+
         if isinstance(knob, (FloatKnob, IntKnob)):
             xs = np.asarray(vals, dtype=float)
             if len(xs) < min_points_for_kde or np.ptp(xs) == 0:
-                continue  # too little signal; keep the full range
-            kde = WeightedKDE(xs, np.asarray(wts))
-            ranges[knob.name] = alpha_mass_region(kde, float(knob.lo), float(knob.hi), alpha)
+                entry = ("skip", None)  # too little signal; keep the full range
+            else:
+                kde = WeightedKDE(xs, np.asarray(wts))
+                region = alpha_mass_region(kde, float(knob.lo), float(knob.hi), alpha)
+                ranges[knob.name] = region
+                entry = ("range", region)
         elif isinstance(knob, (CatKnob, BoolKnob)):
             kept = alpha_mass_categories(vals, wts, alpha)
             cat_subsets[knob.name] = kept
+            entry = ("cats", kept)
+        else:
+            entry = ("skip", None)
+        if range_cache is not None and key is not None:
+            range_cache[key] = entry
+            while len(range_cache) > _RANGE_CACHE_MAX:
+                range_cache.popitem(last=False)
 
     return space.restrict(keep=keep, ranges=ranges, cat_subsets=cat_subsets)
+
+
+_RANGE_CACHE_MAX = 512
 
 
 class SpaceCompressor:
@@ -161,18 +214,35 @@ class SpaceCompressor:
     Regions for *source* tasks depend only on (task observations, weight);
     observations of historical tasks are frozen, so regions are cached and
     only re-scaled when weights change. The target task's own region is
-    recomputed as its observation set grows.
+    recomputed as its observation set grows. KDE fits / alpha-mass regions
+    are additionally memoized across ``compress`` calls (see
+    ``compress_space``'s ``range_cache``).
     """
 
-    def __init__(self, space: ConfigSpace, alpha: float = 0.65, seed: int = 0):
+    def __init__(
+        self,
+        space: ConfigSpace,
+        alpha: float = 0.65,
+        seed: int = 0,
+        backend: str = "batched",
+    ):
         self.space = space
         self.alpha = alpha
         self.seed = seed
+        self.backend = backend
         self._cache: Dict[str, PromisingRegion] = {}
+        self._range_cache: "OrderedDict" = OrderedDict()
 
     def _region(self, task: TaskRecord, weight: float, refresh: bool = False) -> Optional[PromisingRegion]:
         if refresh or task.task_id not in self._cache:
-            r = extract_promising_regions(self.space, task, 1.0, seed=self.seed)
+            # drop any stale entry *before* recomputing: if the recompute
+            # returns None (e.g. the target briefly falls below 4 full-
+            # fidelity observations) the old region must not survive to be
+            # silently served by the next non-refresh call
+            self._cache.pop(task.task_id, None)
+            r = extract_promising_regions(
+                self.space, task, 1.0, seed=self.seed, backend=self.backend
+            )
             if r is None:
                 return None
             self._cache[task.task_id] = r
@@ -205,4 +275,6 @@ class SpaceCompressor:
                     regions.append(r)
         if not regions:
             return self.space
-        return compress_space(self.space, regions, alpha=self.alpha)
+        return compress_space(
+            self.space, regions, alpha=self.alpha, range_cache=self._range_cache
+        )

@@ -71,6 +71,9 @@ class MFTuneOptions:
     space_backend: Optional[str] = None      # config-space backend; None = module
                                              # default (see set_space_backend),
                                              # "scalar" = per-element reference
+    shapley_backend: str = "batched"         # §5.1 attribution plane; "loop" =
+                                             # legacy per-chain reference
+                                             # (bit-identical attributions)
 
 
 @dataclass
@@ -118,7 +121,10 @@ class MFTune:
             self.kb.add_task(self.target, persist=False)
 
         self.sim = SimilarityEngine(self.space, self.kb, seed=self.opt.seed)
-        self.compressor = SpaceCompressor(self.space, alpha=self.opt.alpha, seed=self.opt.seed)
+        self.compressor = SpaceCompressor(
+            self.space, alpha=self.opt.alpha, seed=self.opt.seed,
+            backend=self.opt.shapley_backend,
+        )
         self.gen = CandidateGenerator(
             self.space, seed=self.opt.seed, backend=self.opt.surrogate_backend
         )

@@ -87,19 +87,55 @@ class _Node:
 
 
 _MASK64 = (1 << 64) - 1
+_GOLDEN = 0x9E3779B97F4A7C15
 
 
-def _child_seed(seed: int, right: int) -> int:
-    """Traversal-order-independent per-node seed chain (splitmix64-style).
+def _splitmix64(z: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer over uint64 arrays (wrapping mod 2^64)."""
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
 
-    Both tree builders derive each node's feature-subset RNG from this
+
+def _child_seeds(seeds: np.ndarray, right: int) -> np.ndarray:
+    """Traversal-order-independent per-node seed chain (splitmix64-style),
+    derived for a whole frontier of parent seeds in one array pass.
+
+    Both tree builders derive each node's feature-subset stream from this
     chain, so the recursive (depth-first) and frontier (level-synchronous)
     builders draw identical subsets regardless of node processing order.
     """
-    z = (seed + 0x9E3779B97F4A7C15 * (right + 1)) & _MASK64
-    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
-    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
-    return (z ^ (z >> 31)) & ((1 << 63) - 1)
+    z = np.asarray(seeds, dtype=np.uint64) + np.uint64((_GOLDEN * (right + 1)) & _MASK64)
+    return _splitmix64(z) & np.uint64((1 << 63) - 1)
+
+
+def _child_seed(seed: int, right: int) -> int:
+    """Scalar view of the chain for the recursive reference builder."""
+    return int(_child_seeds(np.asarray([seed], dtype=np.uint64), right)[0])
+
+
+def _feature_subsets(seeds: np.ndarray, d: int, k: int) -> np.ndarray:
+    """Per-node random k-of-d feature subsets for a whole frontier at once.
+
+    A partial Fisher-Yates driven by a splitmix64 counter stream per node:
+    k vectorized swap steps replace one ``Generator`` construction plus a
+    ``permutation`` call *per node* — the dominant Python cost of a frontier
+    level. Deterministic in the node seed and shared by both builders
+    (modulo bias at d <= 64 vs 2^64 states is negligible).
+    """
+    seeds = np.asarray(seeds, dtype=np.uint64)
+    W = len(seeds)
+    perm = np.broadcast_to(np.arange(d), (W, d)).copy()
+    rows = np.arange(W)
+    state = seeds
+    for i in range(min(k, d)):
+        state = state + np.uint64(_GOLDEN)
+        draw = _splitmix64(state)
+        j = i + (draw % np.uint64(d - i)).astype(np.int64)
+        pi = perm[rows, i].copy()
+        perm[rows, i] = perm[rows, j]
+        perm[rows, j] = pi
+    return perm[:, :k]
 
 
 class RegressionTree:
@@ -122,6 +158,7 @@ class RegressionTree:
         max_features: Optional[int] = None,
         rng: Optional[np.random.Generator] = None,
         builder: str = "frontier",
+        root_seed: Optional[int] = None,
     ):
         self.max_depth = max_depth
         self.min_samples_split = min_samples_split
@@ -131,6 +168,9 @@ class RegressionTree:
         if builder not in ("frontier", "recursive"):
             raise ValueError(f"unknown tree builder {builder!r}")
         self.builder = builder
+        # explicit root of the per-node seed chain (forest fits derive all
+        # tree roots in one array pass); None = draw from self.rng
+        self.root_seed = root_seed
         self.nodes: List[_Node] = []
 
     def _n_features(self, d: int) -> int:
@@ -141,7 +181,7 @@ class RegressionTree:
         X = np.asarray(X, dtype=float)
         y = np.asarray(y, dtype=float)
         self.nodes = []
-        root_seed = int(self.rng.integers(2**63))
+        root_seed = self.root_seed if self.root_seed is not None else int(self.rng.integers(2**63))
         if self.builder == "recursive":
             self._build(X, y, np.arange(len(y)), 0, root_seed)
         else:
@@ -171,7 +211,7 @@ class RegressionTree:
         if depth >= self.max_depth or len(idx) < self.min_samples_split or np.ptp(ysub) == 0:
             return nid
         d = X.shape[1]
-        feats = np.random.default_rng(seed).permutation(d)[: self._n_features(d)]
+        feats = _feature_subsets(np.asarray([seed], np.uint64), d, self._n_features(d))[0]
         best = None  # (score, feat, thr)
         for f in feats:
             xs = X[idx, f]
@@ -304,16 +344,17 @@ class RegressionTree:
                 best_sse = sse[rows, j, cols[None, :]]
                 bp = j + 1
                 best_thr = 0.5 * (xs3[rows, bp - 1, cols[None, :]] + xs3[rows, bp, cols[None, :]])
-            # whole-frontier feature pick + child masks: per-node work drops
-            # to the seed-chain permutation draw (bit-identity with the
-            # recursion pins it to one default_rng per node) and the child
-            # bookkeeping; argmin over the perm gather keeps the recursion's
-            # first-strict-min tie-breaking across features
+            # whole-frontier feature pick + child masks: the per-node seed
+            # chain and feature subsets come from one splitmix64 array
+            # derivation (no per-node Generator constructions; the recursion
+            # consumes the identical chain, so builders still agree
+            # bit-for-bit); argmin over the perm gather keeps the
+            # recursion's first-strict-min tie-breaking across features
             rows_w = np.arange(W)
-            # Generator(PCG64(seed)) == default_rng(seed) stream, minus the
-            # dispatch overhead — the recursion's exact permutations
-            _gen, _pcg = np.random.Generator, np.random.PCG64
-            P = np.stack([_gen(_pcg(t[2])).permutation(d)[:k] for t in active])
+            seeds_w = np.array([t[2] for t in active], dtype=np.uint64)
+            lseeds = _child_seeds(seeds_w, 0)
+            rseeds = _child_seeds(seeds_w, 1)
+            P = _feature_subsets(seeds_w, d, k)
             FS = best_sse[rows_w[:, None], P]
             R = np.argmin(FS, axis=1)
             F = P[rows_w, R]
@@ -335,11 +376,11 @@ class RegressionTree:
                 node.left = self._new_node(yl)
                 node.right = self._new_node(yr)
                 next_frontier.append((
-                    node.left, li, _child_seed(seed, 0),
+                    node.left, li, int(lseeds[s]),
                     len(li) >= mss and np.maximum.reduce(yl) != np.minimum.reduce(yl),
                 ))
                 next_frontier.append((
-                    node.right, ri, _child_seed(seed, 1),
+                    node.right, ri, int(rseeds[s]),
                     len(ri) >= mss and np.maximum.reduce(yr) != np.minimum.reduce(yr),
                 ))
             frontier = next_frontier
@@ -491,17 +532,21 @@ class PackedForest:
         )
 
     # ------------------------------------------------------------- inference
-    def predict_trees(self, X: np.ndarray, backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
-        """Per-tree leaf stats, each shape (n_trees, n_points)."""
+    def predict_trees(
+        self, X: np.ndarray, backend: str = "numpy", chunk_n: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-tree leaf stats, each shape (n_trees, n_points). ``chunk_n``
+        bounds rows per descent dispatch (see ``forest_eval``) for oversized
+        pools such as the batched Shapley composite tensor."""
         X = np.atleast_2d(np.asarray(X, dtype=float))
-        if backend == "numpy":
+        if backend == "numpy" and chunk_n is None:
             nid = packed_descend(self.feat, self.thr, self.child, self.roots, X, self.depth)
             return np.take(self.mean, nid), np.take(self.var, nid)
         from ..kernels.forest_eval.ops import forest_eval
 
         return forest_eval(
             self.feat, self.thr, self.child, self.mean, self.var, self.roots,
-            X, self.depth, backend=backend,
+            X, self.depth, backend=backend, chunk_n=chunk_n,
         )
 
     def combine(self, m_t: np.ndarray, v_t: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -512,8 +557,10 @@ class PackedForest:
         var = np.maximum(var, 1e-10)
         return mean * self.y_std + self.y_mean, var * self.y_std**2
 
-    def predict(self, X: np.ndarray, backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
-        return self.combine(*self.predict_trees(X, backend=backend))
+    def predict(
+        self, X: np.ndarray, backend: str = "numpy", chunk_n: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        return self.combine(*self.predict_trees(X, backend=backend, chunk_n=chunk_n))
 
 
 class ForestPlane:
@@ -625,17 +672,30 @@ class ProbabilisticRandomForest(Surrogate):
         # predict loop; every packed backend fits via the level-synchronous
         # frontier builder (bit-identical trees either way).
         builder = "recursive" if self.backend == "loop" else "frontier"
+        # one splitmix64 array derivation replaces the per-tree default_rng
+        # constructions: a single PCG64 array draw seeds a counter stream
+        # per tree, which yields every tree's bootstrap rows and the root of
+        # its per-node seed chain without touching a Generator again
+        tree_seeds = rng.integers(2**63, size=self.n_trees, dtype=np.uint64)
+        root_seeds = _splitmix64(tree_seeds ^ np.uint64(0xD1B54A32D192ED03)) & np.uint64(
+            (1 << 63) - 1
+        )
+        if self.bootstrap and n > 1:
+            ctr = tree_seeds[:, None] + np.uint64(_GOLDEN) * np.arange(
+                1, n + 1, dtype=np.uint64
+            )
+            boot = (_splitmix64(ctr) % np.uint64(n)).astype(np.intp)
+        else:
+            boot = np.broadcast_to(np.arange(n), (self.n_trees, n))
         for t in range(self.n_trees):
-            trng = np.random.default_rng(rng.integers(2**63))
-            idx = trng.integers(0, n, n) if (self.bootstrap and n > 1) else np.arange(n)
             tree = RegressionTree(
                 max_depth=self.max_depth,
                 min_samples_split=self.min_samples_split,
                 min_samples_leaf=self.min_samples_leaf,
-                rng=trng,
+                root_seed=int(root_seeds[t]),
                 builder=builder,
             )
-            tree.fit(X[idx], yn[idx])
+            tree.fit(X[boot[t]], yn[boot[t]])
             self.trees.append(tree)
         return self
 

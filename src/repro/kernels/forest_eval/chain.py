@@ -1,0 +1,208 @@
+"""Bitvector chain evaluator for the batched Shapley plane.
+
+The §5.1 attribution path evaluates, per (config, permutation) chain, the
+(d+1) prefix-composite rows ``z_S`` (x on the prefix set S, background
+elsewhere) averaged over every background row. A gather descent costs
+O(trees * depth) random accesses per composite row; this module replaces it
+with a QuickScorer-style bitvector evaluation (Lucchese et al., SIGIR'15)
+that exploits the chain structure:
+
+* Each tree's leaves get ordinals in left-to-right order (<= 64 per tree,
+  one uint64 word). Every internal node carries a mask clearing its left
+  subtree's leaf bits; a row's exit leaf is the lowest set bit of the AND
+  of the masks of all *false* nodes (``v > thr``, i.e. the row goes right).
+* Which nodes are false depends only on per-feature threshold *ranks*, so
+  per feature we sort the split thresholds and prefix-AND their masks:
+  ``table[j][r]`` = AND of masks of the r smallest thresholds — the false
+  set of any value v with rank r = #(thr < v). Rank compares replay the
+  descent's exact float comparisons, so the exit leaf is identical.
+* A composite row's value vector mixes x and background coordinates by the
+  prefix mask, so its AND factorizes along the permutation: AND of x-term
+  words over the prefix, AND of background-term words over the suffix.
+  Prefix/suffix cumulative ANDs turn the whole chain into ~1 word-AND per
+  (level, background row) instead of a fresh descent.
+
+Leaf means are the exact arena floats and the ensemble reduction replays
+``PackedForest.combine``'s mean ops on the same (trees, rows) layout, so
+chain values are bit-identical to evaluating the materialized composite
+tensor through ``PackedForest.predict`` (see tests/test_shapley_batched.py).
+
+``build_chain_plan`` returns None when the encoding does not apply (a tree
+with more than 64 leaves, or more than 64 features); callers fall back to
+the generic composite-tensor path. Values must be NaN-free (threshold
+ranks come from ``np.searchsorted``).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ChainPlan", "build_chain_plan"]
+
+_ONES = np.uint64(0xFFFFFFFFFFFFFFFF)
+_PLAN_ATTR = "_chain_plan_cache"
+
+
+class ChainPlan:
+    """Per-forest precompute: feature threshold tables + leaf ordinals."""
+
+    def __init__(self, forest, d: int,
+                 thrs: List[np.ndarray], tables: List[np.ndarray],
+                 leaf_mean: np.ndarray, leaf_offs: np.ndarray):
+        self.forest = forest          # PackedForest (for the y denorm)
+        self.d = d
+        self.thrs = thrs              # per feature: sorted split thresholds
+        self.tables = tables          # per feature: (n_thr + 1, T) prefix-ANDs
+        self.leaf_mean = leaf_mean    # flat leaf means, ordinal-indexed
+        self.leaf_offs = leaf_offs    # (T,) offsets into the flat leaf array
+
+    @property
+    def n_trees(self) -> int:
+        return len(self.leaf_offs)
+
+    def row_words(self, V: np.ndarray) -> np.ndarray:
+        """Per-row false-node words, shape (n, d, T).
+
+        ``word[i, j]`` is the AND of the masks of every node on feature j
+        that row i's value makes false — rank r = #(thr < v) via
+        ``searchsorted(..., 'left')``, the exact ``v > thr`` comparison of
+        the packed descent.
+        """
+        V = np.asarray(V, dtype=float)
+        out = np.empty((len(V), self.d, self.n_trees), dtype=np.uint64)
+        for j in range(self.d):
+            out[:, j, :] = self.tables[j][
+                np.searchsorted(self.thrs[j], V[:, j], side="left")
+            ]
+        return out
+
+    def eval_chains(
+        self,
+        X: np.ndarray,
+        background: np.ndarray,
+        perms: np.ndarray,
+        x_of_chain: np.ndarray,
+    ) -> np.ndarray:
+        """Chain values for (chain, level): E_b[f(z_{S_k})], shape (C, d+1).
+
+        perms: (C, d) permutation per chain; x_of_chain: (C,) row of X each
+        chain explains. Matches the composite-tensor path bit-for-bit: the
+        exact mean ops of ``PackedForest.combine`` over the full (T, rows)
+        block, then the same contiguous-axis mean over background rows.
+        """
+        d, nb, T = self.d, len(background), self.n_trees
+        C = len(perms)
+        word_x = self.row_words(X)[x_of_chain]        # (C, d, T)
+        word_b = self.row_words(background)           # (nb, d, T)
+
+        # prefix-AND of x-term words along each chain
+        pref = np.empty((C, d + 1, T), dtype=np.uint64)
+        pref[:, 0] = _ONES
+        for k in range(d):
+            pref[:, k + 1] = pref[:, k] & np.take_along_axis(
+                word_x, perms[:, k][:, None, None], axis=1
+            )[:, 0]
+
+        # walk levels d..0 keeping the running suffix-AND of background-term
+        # words; the exit leaf of row (chain, level, bg) is the lowest set
+        # bit of pref & suffix (QuickScorer), extracted via the float64
+        # exponent of the isolated bit (exact for powers of two)
+        idx = np.empty((C, d + 1, nb, T), dtype=np.intp)
+        suf = np.broadcast_to(_ONES, (C, nb, T)).copy()
+        for k in range(d, -1, -1):
+            acc = pref[:, k][:, None, :] & suf
+            low = acc & (np.uint64(0) - acc)
+            idx[:, k] = (
+                (low.astype(np.float64).view(np.uint64) >> np.uint64(52))
+                - np.uint64(1023)
+            ).astype(np.intp)
+            if k > 0:
+                suf &= word_b[:, perms[:, k - 1], :].transpose(1, 0, 2)
+
+        flat = np.ascontiguousarray((idx + self.leaf_offs).reshape(-1, T).T)
+        m_t = self.leaf_mean.take(flat)               # (T, rows) C-contiguous
+        # ``PackedForest.combine``'s mean output never reads the variance
+        # stats: replaying its exact mean ops here (sequential tree-axis
+        # reduction on the C-contiguous (T, rows) block, then denorm) keeps
+        # bit-identity while skipping the leaf-variance gather entirely
+        mean_rows = m_t.mean(axis=0) * self.forest.y_std + self.forest.y_mean
+        return mean_rows.reshape(C, d + 1, nb).mean(axis=2)
+
+
+def _pack_of(model):
+    """PackedForest from a PRF/PackedForest-like model, else None."""
+    pack = getattr(model, "pack", None)
+    if callable(pack):
+        try:
+            return pack()
+        except Exception:
+            return None
+    return model if hasattr(model, "roots") and hasattr(model, "combine") else None
+
+
+def build_chain_plan(model, d: int) -> Optional[ChainPlan]:
+    """Build (and cache on the packed arena) a ChainPlan, or None.
+
+    None when the model is not a packable forest, a tree exceeds 64 leaves
+    (one uint64 word per tree), or d > 64 (prefix sets as mask bits).
+    """
+    pf = _pack_of(model)
+    if pf is None or d > 64:
+        return None
+    cached = getattr(pf, _PLAN_ATTR, None)
+    if cached is not None and cached[0] == d:
+        return cached[1]
+
+    feat, thr, child = pf.feat, pf.thr, pf.child
+    nodes_by_feat: List[List[Tuple[float, int, np.uint64]]] = [[] for _ in range(d)]
+    leaf_mean: List[float] = []
+    leaf_offs = np.empty(pf.n_trees, dtype=np.intp)
+
+    for t in range(pf.n_trees):
+        leaf_offs[t] = len(leaf_mean)
+        # iterative DFS: leaves get ordinals left-to-right; internal nodes
+        # record (thr, tree, mask clearing the left subtree's leaf span)
+        base = len(leaf_mean)
+        stack = [(int(pf.roots[t]), False)]
+        spans = {}  # node -> (lo, hi) leaf-ordinal range within this tree
+        while stack:
+            n, expanded = stack.pop()
+            if child[2 * n] == n:  # leaf: self-loop encoding
+                spans[n] = (len(leaf_mean) - base, len(leaf_mean) - base + 1)
+                leaf_mean.append(float(pf.mean[n]))
+                continue
+            if not expanded:
+                stack.append((n, True))
+                stack.append((int(child[2 * n + 1]), False))
+                stack.append((int(child[2 * n]), False))
+                continue
+            lo, mid = spans[int(child[2 * n])]
+            _, hi = spans[int(child[2 * n + 1])]
+            spans[n] = (lo, hi)
+            if int(feat[n]) >= d:
+                return None  # splits on a feature outside the space
+            if hi > 64:
+                return None  # tree overflows its uint64 leaf word
+            span = np.uint64(((1 << (mid - lo)) - 1) << lo)
+            nodes_by_feat[int(feat[n])].append(
+                (float(thr[n]), t, np.uint64(~span & _ONES))
+            )
+
+    thrs, tables = [], []
+    for j in range(d):
+        nds = sorted(nodes_by_feat[j], key=lambda z: z[0])
+        tab = np.full((len(nds) + 1, pf.n_trees), _ONES, dtype=np.uint64)
+        for r, (_, t, m) in enumerate(nds):
+            tab[r + 1] = tab[r]
+            tab[r + 1, t] &= m
+        thrs.append(np.array([z[0] for z in nds]))
+        tables.append(tab)
+
+    plan = ChainPlan(pf, d, thrs, tables, np.asarray(leaf_mean), leaf_offs)
+    try:
+        setattr(pf, _PLAN_ATTR, (d, plan))
+    except Exception:
+        pass  # frozen/slotted arena: just skip the cache
+    return plan

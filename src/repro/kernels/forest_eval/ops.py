@@ -105,11 +105,28 @@ def _device_arena(feat, thr, child, mean, var, roots, depth):
 
 def forest_eval(feat, thr, child, mean, var, roots, X, depth,
                 backend: str = "auto", interpret: bool = True,
-                block_n: int = 128) -> Tuple[np.ndarray, np.ndarray]:
-    """Per-tree (mean, var) over the packed arena, each (n_trees, n_points)."""
+                block_n: int = 128,
+                chunk_n: int = None) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-tree (mean, var) over the packed arena, each (n_trees, n_points).
+
+    ``chunk_n`` bounds the candidate rows handled per backend dispatch:
+    oversized pools (the batched Shapley plane builds hundreds of thousands
+    of composite rows) are split into row blocks and the results
+    concatenated. Per-point descent is independent, so chunking never
+    changes a result; on the jax path it also pins the pool-padding bucket
+    to one size class instead of jitting a fresh giant bucket per call.
+    """
     if backend == "auto":
         backend = "jax" if _HAS_JAX else "numpy"
     X = np.atleast_2d(np.asarray(X, dtype=float))
+    if chunk_n is not None and X.shape[0] > chunk_n:
+        parts = [
+            forest_eval(feat, thr, child, mean, var, roots, X[a:a + chunk_n],
+                        depth, backend=backend, interpret=interpret, block_n=block_n)
+            for a in range(0, X.shape[0], chunk_n)
+        ]
+        return (np.concatenate([p[0] for p in parts], axis=1),
+                np.concatenate([p[1] for p in parts], axis=1))
     if backend == "numpy":
         from ...core.surrogate import packed_descend
 
