@@ -25,7 +25,8 @@ KB_ROOT = os.path.join(REPO, ".cache", "sparksim_kb_v2")
 os.makedirs(CACHE, exist_ok=True)
 
 
-CHEAP = {"hb_schedule", "roofline", "batch_eval", "surrogate", "config_space", "compression"}
+CHEAP = {"hb_schedule", "roofline", "batch_eval", "surrogate", "config_space",
+         "compression", "pool_scaling"}
 
 
 def cached(name: str, force: bool, fn: Callable[[], List[dict]]) -> List[dict]:

@@ -28,6 +28,7 @@ BENCHES = [
     ("surrogate", "bench_surrogate"),                   # packed forest plane (ours)
     ("config_space", "bench_config_space"),             # columnar space plane (ours)
     ("compression", "bench_compression"),               # batched Shapley plane (ours)
+    ("pool_scaling", "bench_pool_scaling"),             # fused propose step (ours)
 ]
 
 

@@ -36,12 +36,24 @@ from .surrogate import (
     set_forest_backend,
 )
 from .acquisition import (
+    EI_VAR_FLOOR,
+    acquisition_backend,
+    acquisition_pool,
     aggregate_ranks,
+    aggregate_ranks_jax,
     expected_improvement,
+    expected_improvement_jax,
+    get_acquisition_backend,
+    get_acquisition_pool,
     normal_cdf,
+    plane_cache_stats,
     rank_aggregate,
     score_sources,
+    set_acquisition_backend,
+    set_acquisition_pool,
+    set_plane_cache_size,
 )
+from .propose import ProposeEngine
 from .gbm import GradientBoostedTrees
 from .kde import WeightedKDE, alpha_mass_categories, alpha_mass_region, silverman_bandwidth
 from .shapley import draw_permutations, shapley_values, shapley_values_batch, shapley_values_exact
@@ -67,6 +79,10 @@ __all__ = [
     "GaussianProcess", "ProbabilisticRandomForest",
     "PackedForest", "ForestPlane", "make_forest", "set_forest_backend", "forest_backend",
     "expected_improvement", "rank_aggregate", "aggregate_ranks", "normal_cdf", "score_sources",
+    "EI_VAR_FLOOR", "expected_improvement_jax", "aggregate_ranks_jax",
+    "set_acquisition_backend", "get_acquisition_backend", "acquisition_backend",
+    "set_acquisition_pool", "get_acquisition_pool", "acquisition_pool",
+    "set_plane_cache_size", "plane_cache_stats", "ProposeEngine",
     "GradientBoostedTrees",
     "WeightedKDE", "alpha_mass_categories", "alpha_mass_region", "silverman_bandwidth",
     "draw_permutations", "shapley_values", "shapley_values_batch", "shapley_values_exact",

@@ -6,24 +6,32 @@ is a vectorized ufunc (no per-candidate ``np.vectorize(erf)``),
 fused pass (PRF sources share a single packed-forest descent via
 ``ForestPlane``), and ``aggregate_ranks`` turns an (S, N) score matrix into
 weighted aggregate ranks with one argsort per source row.
+
+Bit-equivalence contract: the numpy EI here is the *reference* for the
+on-device fused propose step (``kernels/forest_eval/propose.py``). Both
+backends instantiate the same portable Cephes-style ``exp``/``ndtr``
+expression tree via :func:`make_portable_kernels`, parameterized over the
+array namespace plus a protected-multiply hook (the jax side routes every
+product that feeds an add through an XOR-seal so XLA:CPU cannot contract
+it into an FMA). Library transcendentals (``np.exp``, ``scipy.ndtr``,
+``jax.scipy`` …) are NOT interchangeable at the bit level across backends;
+these ports are, by construction. The shared variance floor lives in
+:data:`EI_VAR_FLOOR` — one source of truth for both paths.
 """
 
 from __future__ import annotations
 
 import math
 from collections import OrderedDict
-from typing import Sequence, Tuple
+from contextlib import contextmanager
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
 from .surrogate import ForestPlane, ProbabilisticRandomForest, Surrogate
 
-try:
-    from scipy.special import ndtr as _ndtr
-except ImportError:  # pragma: no cover - scipy ships with the image
-    _ndtr = None
-
 __all__ = [
+    "EI_VAR_FLOOR",
     "normal_cdf",
     "expected_improvement",
     "ei_matrix",
@@ -32,30 +40,182 @@ __all__ = [
     "score_sources",
     "aggregate_ranks",
     "rank_aggregate",
+    "make_portable_kernels",
+    "set_acquisition_backend",
+    "get_acquisition_backend",
+    "acquisition_backend",
+    "set_acquisition_pool",
+    "get_acquisition_pool",
+    "acquisition_pool",
+    "set_plane_cache_size",
+    "plane_cache_stats",
+    "expected_improvement_jax",
+    "aggregate_ranks_jax",
 ]
 
+# One variance floor shared by the numpy reference and the jax/pallas
+# propose path — the bit-equivalence tests pin both to this constant.
+EI_VAR_FLOOR = 1e-12
+
 _SQRT2 = math.sqrt(2.0)
+_SQRT2PI = float(np.sqrt(2 * np.pi))
+
+# ---------------------------------------------------------------------------
+# Portable Cephes double-precision exp / ndtr (netlib cephes, exp.c + ndtr.c
+# coefficient tables). Polynomial ratios + exact power-of-two scaling via
+# exponent-field bitcasts: every step is IEEE mul/add/div/sqrt/compare, so
+# instantiating the same expression tree under numpy and jax yields
+# bit-identical outputs — provided products feeding adds are protected from
+# FMA contraction (the ``mul`` hook).
+# ---------------------------------------------------------------------------
+
+_MAXLOG = 709.782712893383996843
+_MINLOG = -708.396418532264106224
+_LOG2E = 1.4426950408889634073599
+_EXP_C1 = 6.93145751953125e-1
+_EXP_C2 = 1.42860682030941723212e-6
+_SQRT1_2 = 0.70710678118654752440
+_MIN_NORMAL = 2.2250738585072014e-308  # smallest normal float64 (FTZ cutoff)
+
+_EXP_P = (1.26177193074810590878e-4, 3.02994407707441961300e-2,
+          9.99999999999999999910e-1)
+_EXP_Q = (3.00198505138664455042e-6, 2.52448340349684104192e-3,
+          2.27265548208155028766e-1, 2.00000000000000000005e0)
+
+_ERF_T = (9.60497373987051638749e0, 9.00260197203842689217e1,
+          2.23200534594684319226e3, 7.00332514112805075473e3,
+          5.55923013010394962768e4)
+_ERF_U = (3.35617141647503099647e1, 5.21357949780152679795e2,
+          4.59432382970980127987e3, 2.26290000613890934246e4,
+          4.92673942608635921086e4)
+_ERFC_P = (2.46196981473530512524e-10, 5.64189564831068821977e-1,
+           7.46321056442269912687e0, 4.86371970985681366614e1,
+           1.96520832956077098242e2, 5.26445194995477358631e2,
+           9.34528527171957607540e2, 1.02755188689515710272e3,
+           5.57535335369399327526e2)
+_ERFC_Q = (1.32281951154744992508e1, 8.67072140885989742329e1,
+           3.54937778887819891062e2, 9.75708501743205489753e2,
+           1.82390916687909736289e3, 2.24633760818710981792e3,
+           1.65666309194161350182e3, 5.57535340817727675546e2)
+_ERFC_R = (5.64189583547755073984e-1, 1.27536670759978104416e0,
+           5.01905042251180477414e0, 6.16021097993053585195e0,
+           7.40974269950448939160e0, 2.97886665372100240670e0)
+_ERFC_S = (2.26052863220117276590e0, 9.39603524938001434673e0,
+           1.20489539808096656605e1, 3.08326216929483867054e1,
+           2.81677489524132947867e1, 7.92101509270425732821e0)
+
+
+def make_portable_kernels(xp, mul, pow2_bits, div=None) -> Dict[str, callable]:
+    """Build exp64 / ndtr64 / EI from one shared IEEE op sequence.
+
+    ``xp``        numpy-compatible namespace (numpy or jax.numpy, x64).
+    ``mul``       protected multiply: must not contract into an FMA with a
+                  following add (plain ``operator.mul`` for numpy; the
+                  XOR-seal under jit).
+    ``pow2_bits`` exact 2**k for integral float k via an exponent-field
+                  bitcast.
+    ``div``       protected divide: XLA rewrites division by a non-power-
+                  of-two *constant* into multiplication by its (rounded)
+                  reciprocal, a 1-ulp hazard — the jax hook seals the
+                  denominator so it is never a constant. Defaults to plain
+                  division (numpy).
+
+    Returns {"exp": exp64, "ndtr": ndtr64, "ei": ei}.
+    """
+    if div is None:
+        div = lambda a, b: a / b  # noqa: E731
+
+    def ftz(v):
+        # XLA:CPU runs with FTZ/DAZ: products/divisions that underflow come
+        # back as (signed) zero, while numpy keeps gradual-underflow
+        # denormals. Flushing the few hazard sites (phi, the erfc tail, the
+        # EI terms) makes underflow behavior part of the shared contract.
+        return xp.where(xp.abs(v) < _MIN_NORMAL, 0.0 * v, v)
+
+    def polevl(x, cs):
+        r = xp.full_like(x, cs[0])
+        for c in cs[1:]:
+            r = mul(r, x) + c
+        return r
+
+    def p1evl(x, cs):
+        r = x + cs[0]
+        for c in cs[1:]:
+            r = mul(r, x) + c
+        return r
+
+    def exp64(x):
+        xs = xp.clip(x, _MINLOG, _MAXLOG)
+        k = xp.floor(mul(_LOG2E, xs) + 0.5)
+        # r = x - k*ln2, split so the reduction is exact
+        r = xs - mul(k, _EXP_C1)
+        r = r - mul(k, _EXP_C2)
+        xx = mul(r, r)
+        p = mul(r, polevl(xx, _EXP_P))
+        w = div(p, polevl(xx, _EXP_Q) - p)
+        w = 1.0 + mul(2.0, w)
+        # two-step 2**k scaling keeps each factor a normal number
+        k1 = xp.floor(mul(k, 0.5))
+        k2 = k - k1
+        out = mul(mul(w, pow2_bits(k1)), pow2_bits(k2))
+        out = xp.where(x < _MINLOG, 0.0, out)
+        return xp.where(x > _MAXLOG, xp.inf, out)
+
+    def ndtr64(z):
+        x = mul(z, _SQRT1_2)
+        ax = xp.abs(x)
+        # |x| < 1: erf series (clip keeps unselected lanes finite)
+        xc = xp.clip(x, -1.0, 1.0)
+        zz = mul(xc, xc)
+        erf_small = div(mul(xc, polevl(zz, _ERF_T)), p1evl(zz, _ERF_U))
+        small = 0.5 + mul(0.5, erf_small)
+        # |x| >= 1: erfc tail, two rational regimes around a = 8
+        a = xp.clip(ax, 1.0, 100.0)
+        ez = exp64(mul(-a, a))
+        p_mid = div(polevl(a, _ERFC_P), p1evl(a, _ERFC_Q))
+        p_big = div(polevl(a, _ERFC_R), p1evl(a, _ERFC_S))
+        ht = ftz(mul(0.5, mul(ez, xp.where(a < 8.0, p_mid, p_big))))
+        big = xp.where(x > 0, 1.0 - ht, ht)
+        return xp.where(ax < 1.0, small, big)
+
+    def ei(mean, var, best):
+        std = xp.sqrt(xp.maximum(var, EI_VAR_FLOOR))
+        diff = best - mean
+        z = div(diff, std)
+        phi = ftz(div(exp64(mul(-0.5, mul(z, z))), _SQRT2PI))
+        val = ftz(mul(diff, ndtr64(z))) + ftz(mul(std, phi))
+        return ftz(xp.maximum(val, 0.0))
+
+    return {"exp": exp64, "ndtr": ndtr64, "ei": ei}
+
+
+def _np_pow2(k: np.ndarray) -> np.ndarray:
+    """Exact 2**k for integral float k in normal range (numpy bitcast)."""
+    return ((np.asarray(k).astype(np.int64) + np.int64(1023))
+            << np.int64(52)).view(np.float64)
+
+
+_NPK = make_portable_kernels(np, lambda a, b: a * b, _np_pow2)
 
 
 def normal_cdf(z: np.ndarray) -> np.ndarray:
-    """Vectorized standard-normal CDF Phi(z)."""
+    """Vectorized standard-normal CDF Phi(z) (portable Cephes ndtr)."""
     z = np.asarray(z, dtype=float)
-    if _ndtr is not None:
-        return _ndtr(z)
-    return 0.5 * (1.0 + np.vectorize(math.erf)(z / _SQRT2))
+    return _NPK["ndtr"](np.atleast_1d(z)).reshape(z.shape)
 
 
 def expected_improvement(mean: np.ndarray, var: np.ndarray, best: float) -> np.ndarray:
     """EI for *minimization*: E[max(best - y, 0)].
 
-    ``best`` is the incumbent (lowest observed) objective value.
+    ``best`` is the incumbent (lowest observed) objective value. Variance
+    is floored at :data:`EI_VAR_FLOOR` — the constant the jax path shares.
     """
-    std = np.sqrt(np.maximum(var, 1e-12))
-    z = (best - mean) / std
-    # Phi and phi of the standard normal
-    phi = np.exp(-0.5 * z**2) / np.sqrt(2 * np.pi)
-    ei = (best - mean) * normal_cdf(z) + std * phi
-    return np.maximum(ei, 0.0)
+    mean = np.asarray(mean, dtype=float)
+    var = np.asarray(var, dtype=float)
+    best_a = np.asarray(best, dtype=float)
+    out = _NPK["ei"](np.atleast_1d(mean), np.atleast_1d(var), best_a)
+    shape = np.broadcast_shapes(mean.shape, var.shape, best_a.shape)
+    return out.reshape(shape)
 
 
 def ei_matrix(means: np.ndarray, vars_: np.ndarray, bests: np.ndarray) -> np.ndarray:
@@ -69,12 +229,97 @@ def ei_scores(model: Surrogate, X: np.ndarray, best: float) -> np.ndarray:
     return expected_improvement(mean, var, best)
 
 
+# ---------------------------------------------------------------------------
+# Acquisition backend / pool-mode switches (mirrors set_space_backend /
+# set_forest_backend). "numpy" keeps the staged host path; "jax"/"pallas"
+# route fusable recommend calls through the fused on-device propose step,
+# differing only in the descent kernel. Pool mode: "device" draws the
+# candidate pool on device from a threaded PRNG key (fast path — changes
+# fixed-seed draws, see CHANGES SEED NOTE); "host" uploads the generator's
+# numpy pool so selections are bit-identical to the numpy path.
+# ---------------------------------------------------------------------------
+
+_ACQ_BACKENDS = ("numpy", "jax", "pallas")
+_ACQ_POOLS = ("device", "host")
+_ACQ_BACKEND = "numpy"
+_ACQ_POOL = "device"
+
+
+def set_acquisition_backend(backend: str) -> str:
+    """Set the module-default acquisition backend; returns the previous."""
+    global _ACQ_BACKEND
+    if backend not in _ACQ_BACKENDS:
+        raise ValueError(f"unknown acquisition backend {backend!r}; "
+                         f"expected one of {_ACQ_BACKENDS}")
+    prev, _ACQ_BACKEND = _ACQ_BACKEND, backend
+    return prev
+
+
+def get_acquisition_backend() -> str:
+    return _ACQ_BACKEND
+
+
+@contextmanager
+def acquisition_backend(backend: str):
+    prev = set_acquisition_backend(backend)
+    try:
+        yield
+    finally:
+        set_acquisition_backend(prev)
+
+
+def set_acquisition_pool(mode: str) -> str:
+    """Set the pool mode for the fused propose step; returns the previous."""
+    global _ACQ_POOL
+    if mode not in _ACQ_POOLS:
+        raise ValueError(f"unknown acquisition pool mode {mode!r}; "
+                         f"expected one of {_ACQ_POOLS}")
+    prev, _ACQ_POOL = _ACQ_POOL, mode
+    return prev
+
+
+def get_acquisition_pool() -> str:
+    return _ACQ_POOL
+
+
+@contextmanager
+def acquisition_pool(mode: str):
+    prev = set_acquisition_pool(mode)
+    try:
+        yield
+    finally:
+        set_acquisition_pool(prev)
+
+
+# ---------------------------------------------------------------------------
 # Fused planes keyed by the identities of their member arenas. PackedForest
 # arenas are immutable and cached per PRF fit, so the same source set maps
 # to the same key across recommend calls within a rung; the stored pack list
-# guards against id() reuse. Small LRU — source sets churn with refits.
+# guards against id() reuse. LRU with hit/miss/eviction stats (surfaced via
+# TuningResult.plane_cache) and a configurable size — at 100+ sources the
+# old hardcoded 8 thrashed silently.
+# ---------------------------------------------------------------------------
 _PLANE_CACHE: "OrderedDict[tuple, Tuple[list, ForestPlane]]" = OrderedDict()
 _PLANE_CACHE_MAX = 8
+_PLANE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def set_plane_cache_size(max_entries: int) -> int:
+    """Resize the fused-plane LRU; returns the previous size."""
+    global _PLANE_CACHE_MAX
+    if max_entries < 1:
+        raise ValueError("plane cache needs at least one entry")
+    prev, _PLANE_CACHE_MAX = _PLANE_CACHE_MAX, int(max_entries)
+    while len(_PLANE_CACHE) > _PLANE_CACHE_MAX:
+        _PLANE_CACHE.popitem(last=False)
+        _PLANE_STATS["evictions"] += 1
+    return prev
+
+
+def plane_cache_stats() -> Dict[str, int]:
+    """Counters in the ``SurrogateStore.cache_stats`` shape."""
+    return {**_PLANE_STATS,
+            "entries": len(_PLANE_CACHE), "max_entries": _PLANE_CACHE_MAX}
 
 
 def _plane_for(packs: list) -> ForestPlane:
@@ -82,11 +327,14 @@ def _plane_for(packs: list) -> ForestPlane:
     entry = _PLANE_CACHE.get(key)
     if entry is not None and all(a is b for a, b in zip(entry[0], packs)):
         _PLANE_CACHE.move_to_end(key)
+        _PLANE_STATS["hits"] += 1
         return entry[1]
+    _PLANE_STATS["misses"] += 1
     plane = ForestPlane(packs)
     _PLANE_CACHE[key] = (packs, plane)
     while len(_PLANE_CACHE) > _PLANE_CACHE_MAX:
         _PLANE_CACHE.popitem(last=False)
+        _PLANE_STATS["evictions"] += 1
     return plane
 
 
@@ -151,3 +399,20 @@ def rank_aggregate(score_lists: Sequence[np.ndarray], weights: Sequence[float]) 
     if len(score_lists) == 0:
         raise ValueError("no scores to aggregate")
     return aggregate_ranks(np.asarray(score_lists, dtype=float), weights)
+
+
+def expected_improvement_jax(mean, var, best) -> np.ndarray:
+    """Jax-backed EI through the fused kernels (x64, bucket-padded).
+
+    Bit-identical to :func:`expected_improvement`; raises ImportError
+    without jax.
+    """
+    from ..kernels.forest_eval import propose as _propose
+    return _propose.ei_host(mean, var, best)
+
+
+def aggregate_ranks_jax(scores, weights) -> np.ndarray:
+    """Jax-backed rank aggregation (x64, bucket-padded), bit-identical to
+    :func:`aggregate_ranks`."""
+    from ..kernels.forest_eval import propose as _propose
+    return _propose.aggregate_ranks_host(scores, weights)

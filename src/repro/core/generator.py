@@ -23,7 +23,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .acquisition import aggregate_ranks, score_sources
+from .acquisition import (
+    aggregate_ranks,
+    get_acquisition_backend,
+    get_acquisition_pool,
+    score_sources,
+)
 from .knowledge import TaskRecord
 from .similarity import TaskWeights, surrogate_for_task
 from .space import ConfigBatch, ConfigSpace
@@ -163,6 +168,7 @@ class CandidateGenerator:
         # each config is encoded once per tuning run instead of per call.
         self._key_cache: Dict[int, bytes] = {}
         self._key_refs: List[Config] = []  # keeps dicts alive => ids stay valid
+        self._propose_eng: Any = None  # lazy ProposeEngine; False = unavailable
 
     def set_sample_space(self, space: ConfigSpace) -> None:
         """Install the compressed space; candidates are sampled from it and
@@ -297,6 +303,11 @@ class CandidateGenerator:
         sources in a fused pass (shared packed-forest descent + EI matrix +
         rank aggregation); only the returned top-n materialize as dicts.
         """
+        active = [s for s in sources if s.weight > 0]
+        if active and get_acquisition_backend() != "numpy":
+            got = self._recommend_fused(n, active, incumbents, exclude)
+            if got is not None:
+                return got
         pool = self._candidate_pool(incumbents)
         # de-duplicate against already-evaluated configs (exact canonical
         # row match; the exclusion keys are cached across calls)
@@ -305,7 +316,6 @@ class CandidateGenerator:
             keep = np.array([k not in seen for k in pool.row_keys()], dtype=bool)
             if keep.any() and not keep.all():
                 pool = pool.take(np.flatnonzero(keep))
-        active = [s for s in sources if s.weight > 0]
         if not active:
             order = self._rng.permutation(len(pool))
             return [pool[int(i)] for i in order[:n]]
@@ -314,3 +324,67 @@ class CandidateGenerator:
         agg = aggregate_ranks(scores, [s.weight for s in active])
         order = np.argsort(agg, kind="stable")
         return [pool[int(i)] for i in order[:n]]
+
+    # -------------------------------------------------------- fused propose
+    @property
+    def propose_engine(self):
+        """Lazy ProposeEngine (None when jax is unavailable)."""
+        if self._propose_eng is None:
+            try:
+                from .propose import ProposeEngine
+
+                eng = ProposeEngine(
+                    self.space, seed=self.seed, pool_size=self.pool_size
+                )
+                self._propose_eng = eng if eng.available() else False
+            except ImportError:
+                self._propose_eng = False
+        return self._propose_eng or None
+
+    def _recommend_fused(
+        self,
+        n: int,
+        active: Sequence[SurrogateSource],
+        incumbents: Sequence[Config],
+        exclude: Sequence[Config],
+    ) -> Optional[List[Config]]:
+        """Route recommend through the fused on-device propose step.
+
+        Returns None when the fused program doesn't apply (no jax, non-PRF
+        sources, loop backend, non-uniform tree counts) so the staged numpy
+        path takes over. Pool mode "host" scores the generator's own pool
+        on device — selections are bit-identical to the numpy path; pool
+        mode "device" draws the pool on device from the engine's threaded
+        PRNG key (different draws than the host rng — SEED NOTE).
+        """
+        eng = self.propose_engine
+        models = [s.model for s in active]
+        if eng is None or not eng.fusable(models):
+            return None
+        descent = "pallas" if get_acquisition_backend() == "pallas" else "auto"
+        incs = [s.incumbent for s in active]
+        ws = [s.weight for s in active]
+        if get_acquisition_pool() == "host":
+            pool = self._candidate_pool(incumbents)
+            if len(exclude):
+                seen = set(self._config_keys(exclude))
+                keep = np.array([k not in seen for k in pool.row_keys()], dtype=bool)
+                if keep.any() and not keep.all():
+                    pool = pool.take(np.flatnonzero(keep))
+            idx = eng.score_topk(models, pool.unit(), incs, ws, n, descent=descent)
+            return [pool[int(i)] for i in idx]
+        _, units, _ = eng.propose(
+            models, incs, ws, n, sample_space=self.sample_space, descent=descent
+        )
+        batch = self.space.decode_many(units)
+        if not len(exclude):
+            return [batch[int(i)] for i in range(min(n, len(batch)))]
+        seen = set(self._config_keys(exclude))
+        out: List[Config] = []
+        for i, key in enumerate(batch.row_keys()):
+            if key in seen:
+                continue
+            out.append(batch[int(i)])
+            if len(out) >= n:
+                break
+        return out

@@ -74,6 +74,14 @@ class MFTuneOptions:
     shapley_backend: str = "batched"         # §5.1 attribution plane; "loop" =
                                              # legacy per-chain reference
                                              # (bit-identical attributions)
+    acquisition_backend: Optional[str] = None  # propose-step backend; None =
+                                               # module default, "numpy" =
+                                               # staged host path, "jax" /
+                                               # "pallas" = fused on-device
+    acquisition_pool: Optional[str] = None     # fused pool source; "device" =
+                                               # on-device draws (SEED NOTE),
+                                               # "host" = upload numpy pool
+                                               # (bit-identical selections)
 
 
 @dataclass
@@ -94,6 +102,7 @@ class TuningResult:
     mfo_activation_time: Optional[float]
     overheads: Dict[str, float] = field(default_factory=dict)
     surrogate_cache: Dict[str, int] = field(default_factory=dict)  # store hit/miss counters
+    plane_cache: Dict[str, int] = field(default_factory=dict)      # fused-plane LRU counters
 
 
 class MFTune:
@@ -301,13 +310,24 @@ class MFTune:
 
     # ------------------------------------------------------------------ main
     def run(self, budget: Budget) -> TuningResult:
-        if self.opt.space_backend is not None:
-            with _space_backend_ctx(self.opt.space_backend):
-                return self._run(budget)
-        return self._run(budget)
+        from contextlib import ExitStack
+
+        from .acquisition import acquisition_backend, acquisition_pool
+
+        with ExitStack() as stack:
+            if self.opt.space_backend is not None:
+                stack.enter_context(_space_backend_ctx(self.opt.space_backend))
+            if self.opt.acquisition_backend is not None:
+                stack.enter_context(acquisition_backend(self.opt.acquisition_backend))
+            if self.opt.acquisition_pool is not None:
+                stack.enter_context(acquisition_pool(self.opt.acquisition_pool))
+            return self._run(budget)
 
     def _run(self, budget: Budget) -> TuningResult:
+        from .acquisition import plane_cache_stats
+
         opt = self.opt
+        plane0 = plane_cache_stats()
         # ---------------- Phase 1 warm start (once, full fidelity)
         weights = self._weights()
         if opt.enable_warmstart_p1 and opt.enable_transfer:
@@ -362,6 +382,14 @@ class MFTune:
             mfo_activation_time=self._mfo_activation_time,
             overheads=dict(self._overheads),
             surrogate_cache=self.gen.cache_stats,
+            plane_cache={
+                **{
+                    k: plane_cache_stats()[k] - plane0[k]
+                    for k in ("hits", "misses", "evictions")
+                },
+                "entries": plane_cache_stats()["entries"],
+                "max_entries": plane_cache_stats()["max_entries"],
+            },
         )
 
     # --------------------------------------------------------------- BO step

@@ -1,0 +1,300 @@
+"""Host-side driver for the fused on-device propose step.
+
+:class:`ProposeEngine` owns everything the jitted program in
+``repro.kernels.forest_eval.propose`` needs resident on device: the fused
+``ForestPlane`` arena (via the acquisition plane LRU, so cache stats stay
+in one place), per-source denorm stats, and the sample-space transform
+tables — uploaded once per (plane / space) identity and reused across
+propose calls. It also threads the JAX PRNG key between steps and tracks
+every static jit signature it has launched, which is the jit-cache-growth
+guard surface for the pool-scaling bench (compile count must stay bounded
+by the number of shape buckets).
+
+Two pool modes (see ``acquisition.set_acquisition_pool``):
+
+* ``device`` — the pool is drawn on device from the threaded key
+  (uniform + LHS halves over the sample space's restriction CDFs); only
+  the top-k rows come back to the host. Fastest path; changes fixed-seed
+  pool draws (SEED NOTE in CHANGES.md).
+* ``host`` — the generator's numpy pool is uploaded and only scoring +
+  selection run on device, so the chosen indices are bit-identical to the
+  staged numpy path (this is what the MFTune trajectory-identity test
+  pins).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .surrogate import ForestPlane, ProbabilisticRandomForest
+
+__all__ = ["ProposeEngine"]
+
+_CONST_SIG = (4, False, False, False, False, 1)  # dropped knob: unit default
+
+# descent="auto" picks the merged QuickScorer tables at pool buckets >= this
+# (measured crossover on XLA:CPU — below it the per-feature table gathers
+# cost more than the pointer-chasing they replace), gather descent below
+QS_AUTO_MIN = 32768
+
+
+class ProposeEngine:
+    def __init__(self, space, seed: int = 0, pool_size: int = 256,
+                 margin: int = 64, arena_cache: int = 8):
+        self.space = space
+        self.seed = seed
+        self.pool_size = pool_size
+        self.margin = margin
+        self._key = None
+        self._zi = None
+        self._arena_cache: "OrderedDict[int, tuple]" = OrderedDict()
+        self._arena_cache_max = arena_cache
+        self._tables_cache: "OrderedDict[int, tuple]" = OrderedDict()
+        # every static jit signature launched; the bench asserts this stays
+        # <= the number of shape buckets it sweeps (jit-cache-growth guard)
+        self.compiled: set = set()
+
+    # ----------------------------------------------------------- availability
+    @staticmethod
+    def available() -> bool:
+        try:
+            import jax  # noqa: F401
+            return True
+        except ImportError:
+            return False
+
+    @staticmethod
+    def fusable(models: Sequence) -> bool:
+        """True when the fused program applies: fitted PRFs on a packed
+        backend with a uniform tree count (the per-source slice contract)."""
+        if not models:
+            return False
+        if not all(
+            isinstance(m, ProbabilisticRandomForest) and m.trees and m.backend != "loop"
+            for m in models
+        ):
+            return False
+        return len({len(m.trees) for m in models}) == 1
+
+    # --------------------------------------------------------------- uploads
+    def _x64(self):
+        import jax
+        return jax.experimental.enable_x64(True)
+
+    def _plane(self, models: Sequence) -> ForestPlane:
+        from .acquisition import _plane_for
+        return _plane_for([m.pack() for m in models])
+
+    def _arena_for(self, plane: ForestPlane) -> Tuple[tuple, tuple, Optional[tuple]]:
+        """Device-resident (arena, ystats, qs_plan) for a fused plane,
+        LRU-cached by plane identity. Unlike ``ops._device_arena`` this
+        keeps the exact tree set (no power-of-two root padding): padded
+        trees would pollute the per-source combine and double the descent
+        work. ``qs_plan`` is the uploaded merged QuickScorer table set
+        (None when a tree exceeds 64 leaves — gather descent then)."""
+        key = id(plane)
+        hit = self._arena_cache.get(key)
+        if hit is not None and hit[0] is plane:
+            self._arena_cache.move_to_end(key)
+            return hit[1], hit[2], hit[3]
+        import jax.numpy as jnp
+
+        from ..kernels.forest_eval.propose import build_qs_plan
+
+        # the upload dtype follows the ambient x64 flag; entering the scope
+        # here keeps a direct caller outside propose()/score_topk() from
+        # silently caching a float32 arena
+        with self._x64():
+            return self._arena_upload(plane, jnp, build_qs_plan, key)
+
+    def _arena_upload(self, plane, jnp, build_qs_plan, key):
+        arena = tuple(jnp.asarray(a) for a in (
+            plane.feat, plane.thr, plane.child, plane.mean, plane.var,
+            plane.roots,
+        ))
+        # y_std**2 on host with the same python-float pow PackedForest.combine
+        # uses, so the device denorm replays it exactly
+        ystats = (
+            jnp.asarray(plane.y_means),
+            jnp.asarray(plane.y_stds),
+            jnp.asarray(np.array([f.y_std ** 2 for f in plane.forests])),
+        )
+        qs_host = build_qs_plan(plane.feat, plane.thr, plane.child,
+                                plane.mean, plane.var, plane.roots,
+                                self.space.dim)
+        qs = None
+        if qs_host is not None:
+            thrs, tabs, lm, lv, offs = qs_host
+            qs = (
+                tuple(jnp.asarray(a) for a in thrs),
+                tuple(jnp.asarray(a) for a in tabs),
+                jnp.asarray(lm), jnp.asarray(lv), jnp.asarray(offs),
+            )
+        self._arena_cache[key] = (plane, arena, ystats, qs)
+        while len(self._arena_cache) > self._arena_cache_max:
+            self._arena_cache.popitem(last=False)
+        return arena, ystats, qs
+
+    def _tables_for(self, sample_space) -> Tuple[tuple, tuple]:
+        """Device transform tables for pool draws over ``sample_space``,
+        mapped onto the *full* space's column order (dropped knobs become
+        constant unit-default columns). Restrictions don't change a knob's
+        lo/hi/log, so the sample space's unit transform is the full space's.
+        """
+        key = id(sample_space)
+        hit = self._tables_cache.get(key)
+        if hit is not None and hit[0] is sample_space:
+            self._tables_cache.move_to_end(key)
+            return hit[1], hit[2]
+        import jax.numpy as jnp
+
+        with self._x64():
+            return self._tables_upload(sample_space, jnp, key)
+
+    def _tables_upload(self, sample_space, jnp, key):
+        ss_plane = sample_space.plane()
+        sig_ss, cols_ss = ss_plane.device_tables()
+        pos = {name: i for i, name in enumerate(sample_space.names)}
+        fplane = self.space.plane()
+        unit_default = fplane.encode_values(
+            np.atleast_2d(fplane.default_row.copy())
+        )[0]
+        sig: List[tuple] = []
+        cols: List[tuple] = []
+        for j, name in enumerate(self.space.names):
+            i = pos.get(name)
+            if i is None:
+                sig.append(_CONST_SIG)
+                cols.append((jnp.asarray(np.array([unit_default[j]])),))
+            else:
+                sig.append(sig_ss[i])
+                cols.append(tuple(jnp.asarray(a) for a in cols_ss[i]))
+        entry = (sample_space, tuple(sig), tuple(cols))
+        self._tables_cache[key] = entry
+        while len(self._tables_cache) > self._arena_cache_max:
+            self._tables_cache.popitem(last=False)
+        return entry[1], entry[2]
+
+    def _next_key(self):
+        import jax
+        if self._key is None:
+            self._key = jax.random.PRNGKey(self.seed)
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _zero(self):
+        import jax.numpy as jnp
+        if self._zi is None:
+            self._zi = jnp.zeros((), dtype=jnp.uint64)
+        return self._zi
+
+    @staticmethod
+    def _pow2(n: int) -> int:
+        return 1 << (max(int(n), 1) - 1).bit_length()
+
+    # ---------------------------------------------------------------- propose
+    def propose(
+        self,
+        models: Sequence,
+        incumbents: Sequence[float],
+        weights: Sequence[float],
+        n: int,
+        sample_space=None,
+        descent: str = "auto",
+        pool_size: Optional[int] = None,
+        steps: Optional[int] = None,
+    ):
+        """Device-pool mode: draw a fresh on-device pool from the threaded
+        key and return the fused top-k as ``(idx, unit_rows, agg)`` numpy
+        arrays (k = n + margin rows for host-side exclusion dedup). With
+        ``steps`` set, runs that many iterations under one ``lax.scan`` and
+        returns stacked outputs with a leading steps axis."""
+        from ..kernels.forest_eval import propose as P
+
+        with self._x64():
+            plane = self._plane(models)
+            tps = plane.uniform_tree_count
+            if tps is None:
+                raise ValueError("propose requires a uniform tree count per source")
+            arena, ystats, qs = self._arena_for(plane)
+            sig, cols = self._tables_for(sample_space or self.space)
+            import jax.numpy as jnp
+
+            n_pool = P.pool_bucket(pool_size or self.pool_size)
+            if descent == "auto":
+                descent = "qs" if qs is not None and n_pool >= QS_AUTO_MIN else "jax"
+            elif descent == "qs" and qs is None:
+                raise ValueError("no QuickScorer plan (a tree exceeds 64 leaves)")
+            k = min(self._pow2(n + self.margin), n_pool)
+            S = len(plane.forests)
+            inc = jnp.asarray(np.asarray(incumbents, dtype=float))
+            w = jnp.asarray(np.asarray(weights, dtype=float))
+            static = ("propose", n_pool, plane.depth, S, tps, k, sig, descent,
+                      steps)
+            self.compiled.add(static)
+            if steps is None:
+                idx, Xu, agg = P.propose_step(
+                    self._next_key(), cols, arena, ystats, inc, w,
+                    self._zero(), n_pool=n_pool, depth=plane.depth,
+                    n_sources=S, tps=tps, k=k, sig=sig, descent=descent,
+                    qs=qs if descent == "qs" else None,
+                )
+            else:
+                if self._key is None:
+                    import jax
+                    self._key = jax.random.PRNGKey(self.seed)
+                self._key, (idx, Xu, agg) = P.propose_scan(
+                    self._key, cols, arena, ystats, inc, w, self._zero(),
+                    n_pool=n_pool, depth=plane.depth, n_sources=S, tps=tps,
+                    k=k, sig=sig, descent=descent, steps=steps,
+                    qs=qs if descent == "qs" else None,
+                )
+            return np.asarray(idx), np.asarray(Xu), np.asarray(agg)
+
+    def score_topk(
+        self,
+        models: Sequence,
+        X_unit: np.ndarray,
+        incumbents: Sequence[float],
+        weights: Sequence[float],
+        n: int,
+        descent: str = "auto",
+    ) -> np.ndarray:
+        """Host-pool mode: score an uploaded unit pool and return the top-n
+        candidate indices, bit-identical to the staged numpy path
+        (``score_sources`` → ``aggregate_ranks`` → stable argsort)."""
+        from ..kernels.forest_eval import propose as P
+
+        X_unit = np.atleast_2d(np.asarray(X_unit, dtype=float))
+        with self._x64():
+            plane = self._plane(models)
+            tps = plane.uniform_tree_count
+            if tps is None:
+                raise ValueError("score_topk requires a uniform tree count per source")
+            arena, ystats, qs = self._arena_for(plane)
+            import jax.numpy as jnp
+
+            N, D = X_unit.shape
+            bucket = P.pool_bucket(N)
+            if descent == "auto":
+                descent = "qs" if qs is not None and bucket >= QS_AUTO_MIN else "jax"
+            elif descent == "qs" and qs is None:
+                raise ValueError("no QuickScorer plan (a tree exceeds 64 leaves)")
+            Xp = np.zeros((bucket, D))
+            Xp[:N] = X_unit
+            k = min(self._pow2(n), bucket)
+            S = len(plane.forests)
+            inc = jnp.asarray(np.asarray(incumbents, dtype=float))
+            w = jnp.asarray(np.asarray(weights, dtype=float))
+            static = ("score", bucket, plane.depth, S, tps, k, descent)
+            self.compiled.add(static)
+            idx, _, _ = P.propose_step(
+                None, None, arena, ystats, inc, w, self._zero(),
+                n_pool=bucket, depth=plane.depth, n_sources=S, tps=tps,
+                k=k, sig=(), descent=descent, X=jnp.asarray(Xp), n_valid=N,
+                qs=qs if descent == "qs" else None,
+            )
+            return np.asarray(idx)[: min(n, N)]

@@ -581,6 +581,39 @@ class SpacePlane:
         nearest = tab.edges[np.argmin(np.abs(v[:, None] - tab.edges[None, :]), axis=1)]
         return np.where(inside, v, nearest)
 
+    # ----------------------------------------------------------- device pool
+    def device_tables(self) -> Tuple[tuple, tuple]:
+        """Static per-knob signature + arrays for the on-device sampler.
+
+        Returns ``(sig, cols)``: ``sig`` is a hashable tuple of per-knob
+        ``(kind, is_log, transformed, degenerate, zero_span, size)`` tuples
+        (a jit static argument for the fused propose step), ``cols`` the
+        matching tuple of per-knob numpy array tuples — numeric knobs get
+        ``(ga, gb, cum, mid, scal)`` with ``scal = [t_lo, t_span, lo, hi]``
+        (the restriction-CDF tables plus the log-affine unit transform),
+        categorical/bool knobs ``(act,)`` with the choice count carried in
+        the signature. The fused propose step uploads these once and
+        replays ``_quantile_col`` + clipped ``_to_unit_col`` per column on
+        device.
+        """
+        sig, cols = [], []
+        for j in range(len(self.space.knobs)):
+            kj = int(self.kind[j])
+            if kj in (_KIND_FLOAT, _KIND_INT):
+                tab = self.num_tables[j]
+                sig.append((kj, bool(self.is_log[j]), bool(tab.transformed),
+                            bool(tab.degenerate), bool(self.zero_span[j]),
+                            len(tab.ga)))
+                scal = np.array([self.t_lo[j], self.t_span[j],
+                                 self.lo[j], self.hi[j]])
+                cols.append((tab.ga, tab.gb, tab.cum, tab.mid, scal))
+            else:
+                tab = self.cat_tables[j]
+                sig.append((kj, False, False, False, False,
+                            int(self.n_choices[j])))
+                cols.append((tab.act,))
+        return tuple(sig), tuple(cols)
+
     # ------------------------------------------------------------ matrix ops
     def encode_values(self, V: np.ndarray) -> np.ndarray:
         U = np.empty_like(V)

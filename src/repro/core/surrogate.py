@@ -597,6 +597,14 @@ class ForestPlane:
     def from_forests(forests: Sequence[PackedForest]) -> "ForestPlane":
         return ForestPlane(forests)
 
+    @property
+    def uniform_tree_count(self) -> Optional[int]:
+        """Trees per source when all sources agree, else None — the shape
+        contract for the fused device paths (forest_plane_eval and the
+        propose step), which slice the leaf-stat matrix per source."""
+        counts = {f.n_trees for f in self.forests}
+        return next(iter(counts)) if len(counts) == 1 else None
+
     def predict(self, X: np.ndarray, backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
         """Fused multi-source predict: (means, vars), each (S, N)."""
         X = np.atleast_2d(np.asarray(X, dtype=float))

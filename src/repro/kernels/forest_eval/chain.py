@@ -39,10 +39,20 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["ChainPlan", "build_chain_plan"]
+__all__ = ["ChainPlan", "build_chain_plan", "chain_decline_reason"]
 
 _ONES = np.uint64(0xFFFFFFFFFFFFFFFF)
 _PLAN_ATTR = "_chain_plan_cache"
+
+# why the most recent build_chain_plan call returned None ("" after a success);
+# surfaces the fallback cause so callers/tests can assert it instead of
+# guessing from a bare None
+_DECLINE_REASON = ""
+
+
+def chain_decline_reason() -> str:
+    """Reason the last ``build_chain_plan`` call declined, "" on success."""
+    return _DECLINE_REASON
 
 
 class ChainPlan:
@@ -148,11 +158,17 @@ def build_chain_plan(model, d: int) -> Optional[ChainPlan]:
     None when the model is not a packable forest, a tree exceeds 64 leaves
     (one uint64 word per tree), or d > 64 (prefix sets as mask bits).
     """
+    global _DECLINE_REASON
     pf = _pack_of(model)
-    if pf is None or d > 64:
+    if pf is None:
+        _DECLINE_REASON = "not a packable forest"
+        return None
+    if d > 64:
+        _DECLINE_REASON = f"d={d} > 64 prefix-mask bits"
         return None
     cached = getattr(pf, _PLAN_ATTR, None)
     if cached is not None and cached[0] == d:
+        _DECLINE_REASON = ""
         return cached[1]
 
     feat, thr, child = pf.feat, pf.thr, pf.child
@@ -182,9 +198,16 @@ def build_chain_plan(model, d: int) -> Optional[ChainPlan]:
             _, hi = spans[int(child[2 * n + 1])]
             spans[n] = (lo, hi)
             if int(feat[n]) >= d:
-                return None  # splits on a feature outside the space
+                _DECLINE_REASON = (
+                    f"tree {t} splits on feature {int(feat[n])} outside the "
+                    f"{d}-dim space"
+                )
+                return None
             if hi > 64:
-                return None  # tree overflows its uint64 leaf word
+                _DECLINE_REASON = (
+                    f"tree {t} has {hi} leaves > 64-bit leaf word"
+                )
+                return None
             span = np.uint64(((1 << (mid - lo)) - 1) << lo)
             nodes_by_feat[int(feat[n])].append(
                 (float(thr[n]), t, np.uint64(~span & _ONES))
@@ -201,6 +224,7 @@ def build_chain_plan(model, d: int) -> Optional[ChainPlan]:
         tables.append(tab)
 
     plan = ChainPlan(pf, d, thrs, tables, np.asarray(leaf_mean), leaf_offs)
+    _DECLINE_REASON = ""
     try:
         setattr(pf, _PLAN_ATTR, (d, plan))
     except Exception:

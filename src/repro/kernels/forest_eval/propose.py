@@ -1,0 +1,557 @@
+"""Fused on-device BO propose step (jax, x64).
+
+One jitted program runs an entire propose iteration with zero host round
+trips until the chosen candidate indices come back: pool draw (uniform +
+LHS halves in unit space, replaying ``SpacePlane._quantile_col`` /
+``_to_unit_col`` from the uploaded transform tables), packed-forest descent
+(merged QuickScorer bitvector tables across all sources' trees by default;
+the ``forest_eval`` gather or pallas kernel otherwise), per-source ensemble
+combine, EI, weighted rank aggregation, and stable top-k.
+
+Bit-equivalence contract (vs the numpy acquisition reference):
+
+* Descent does no float arithmetic — leaf routing is bit-exact (PR 2).
+* The combine unrolls ``PackedForest.combine``'s numpy op sequence per
+  source at trace time: numpy's axis-0 mean/var reduce rows *sequentially*,
+  so the jax side accumulates tree rows in the same order.
+* EI instantiates the same portable Cephes expression tree as the numpy
+  reference (``acquisition.make_portable_kernels``).
+* Rank aggregation sorts a monotone uint64 remap of the negated scores
+  (strictly order-preserving on floats; +/-0 canonicalized first since
+  they compare equal) with an int32 payload — XLA:CPU sorts integer keys
+  with narrow payloads measurably faster than f64 keys with i64 payloads —
+  then scatter-adds the weighted rank of each source into the aggregate in
+  source order, which is numpy's exact per-element add sequence.
+* Every product that can feed an add is routed through an XOR-seal
+  (:func:`seal`) — a bitcast round trip XORed with a *runtime* uint64 zero
+  argument. XLA cannot constant-fold it (the zero is a parameter) and LLVM
+  cannot contract a multiply with an integer XOR in between into an FMA,
+  which is the one source of 1-ulp divergence on XLA:CPU. Overhead ~2%.
+
+Pool shapes are padded to power-of-two buckets (256 … 131072) so a tuning
+run compiles a handful of programs, not one per pool size. Padding rows
+are appended *after* the real rows and forced to EI = -1 (< any real EI,
+which is >= 0), so under a stable descending sort every real row keeps its
+exact unpadded rank; aggregate ranks of padding are masked to +inf before
+the final stable top-k argsort.
+
+``propose_scan`` wraps the same step body in ``lax.scan``, splitting the
+PRNG key per step — the multi-step inner loop the ISSUE asks for.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+except ImportError as _e:  # pragma: no cover - jax ships with the image
+    jax = None
+    _jax_err = _e
+
+from ...core import acquisition as _acq
+from .ref import _descend
+
+__all__ = [
+    "POOL_BUCKET_MIN",
+    "POOL_BUCKET_MAX",
+    "pool_bucket",
+    "seal",
+    "build_qs_plan",
+    "propose_step",
+    "propose_scan",
+    "ei_host",
+    "aggregate_ranks_host",
+]
+
+# Bucketed-shape protocol: pool sizes pad up to the next power of two in
+# [256, 131072]; larger pools keep padding to powers of two (the jit cache
+# then grows logarithmically, guarded by the bench).
+POOL_BUCKET_MIN = 256
+POOL_BUCKET_MAX = 131072
+
+
+def pool_bucket(n: int) -> int:
+    """Power-of-two pool bucket for ``n`` candidates (>= POOL_BUCKET_MIN)."""
+    return max(POOL_BUCKET_MIN, 1 << (max(int(n), 1) - 1).bit_length())
+
+
+def _require_jax():
+    if jax is None:  # pragma: no cover
+        raise RuntimeError(f"jax is required for the fused propose step: {_jax_err}")
+
+
+def _x64():
+    _require_jax()
+    return jax.experimental.enable_x64(True)
+
+
+# ---------------------------------------------------------------------------
+# FMA barrier + portable-kernel plumbing
+# ---------------------------------------------------------------------------
+
+
+def seal(x, zi):
+    """FMA barrier: bitcast -> XOR with runtime-zero ``zi`` -> bitcast back.
+
+    Value-preserving, but opaque to both XLA's algebraic simplifier (zi is
+    a parameter, not a constant) and LLVM's fmul+fadd contraction (integer
+    ops break the float dataflow). Apply to any product that may feed an
+    add/sub when bit-identity with numpy matters.
+    """
+    bits = lax.bitcast_convert_type(x, jnp.uint64)
+    return lax.bitcast_convert_type(bits ^ zi, jnp.float64)
+
+
+def _seal_mul(zi):
+    def mul(a, b):
+        return seal(jnp.multiply(a, b), zi)
+
+    return mul
+
+
+def _seal_div(zi):
+    # sealing the denominator keeps XLA from rewriting division by a
+    # constant into multiplication by its rounded reciprocal
+    def div(a, b):
+        return jnp.divide(a, seal(jnp.asarray(b, dtype=jnp.float64), zi))
+
+    return div
+
+
+def _pow2_bits(k):
+    """Exact 2**k for integral float k in normal range (exponent bitcast)."""
+    ki = (k.astype(jnp.int64) + 1023) << 52
+    return lax.bitcast_convert_type(ki, jnp.float64)
+
+
+def _kernels(zi):
+    return _acq.make_portable_kernels(jnp, _seal_mul(zi), _pow2_bits,
+                                      div=_seal_div(zi))
+
+
+# ---------------------------------------------------------------------------
+# numpy-replay building blocks (traced)
+# ---------------------------------------------------------------------------
+
+
+def _combine_source(m_t, v_t, y_mean, y_std, y_std2, mul, div):
+    """Replay ``PackedForest.combine`` on one source's (tps, N) leaf stats.
+
+    numpy's axis-0 reductions add rows sequentially in index order; the
+    trace-time unroll reproduces that order with sealed squares/denorms
+    (and sealed /T divisions — T is a trace-time constant).
+    """
+    T = m_t.shape[0]
+    ms = m_t[0]
+    for t in range(1, T):
+        ms = ms + m_t[t]
+    mean = div(ms, T)
+    vs = v_t[0]
+    for t in range(1, T):
+        vs = vs + v_t[t]
+    vmean = div(vs, T)
+    dev = m_t[0] - mean
+    acc = mul(dev, dev)
+    for t in range(1, T):
+        dev = m_t[t] - mean
+        acc = acc + mul(dev, dev)
+    var = jnp.maximum(vmean + div(acc, T), 1e-10)
+    return mul(mean, y_std) + y_mean, mul(var, y_std2)
+
+
+def _sort_perm_desc(scores):
+    """The permutation ``jnp.argsort(-scores, axis=1, stable=True)`` would
+    return, via a stable sort of monotone uint64 keys with an int32 payload
+    (~15% faster than the f64-keyed argsort on XLA:CPU, and it skips the
+    i64 payload x64 mode would impose). +/-0 compare equal under the f64
+    order but map to distinct bit patterns, so they are canonicalized to
+    one key first — ties then fall back to index order exactly like the
+    stable numpy argsort."""
+    neg = jnp.negative(scores)
+    neg = jnp.where(neg == 0.0, 0.0, neg)
+    bits = lax.bitcast_convert_type(neg, jnp.uint64)
+    sign = (bits >> jnp.uint64(63)).astype(bool)
+    mapped = jnp.where(sign, ~bits, bits | (jnp.uint64(1) << jnp.uint64(63)))
+    iota = jnp.broadcast_to(
+        jnp.arange(scores.shape[1], dtype=jnp.int32)[None, :], scores.shape
+    )
+    _, perm = lax.sort((mapped, iota), dimension=1, is_stable=True, num_keys=1)
+    return perm
+
+
+def _sort_perm_asc1d(v):
+    """``jnp.argsort(v, stable=True)`` for a 1-D float vector via the same
+    monotone uint64 key + int32 payload trick (+/-0 canonicalized)."""
+    v = jnp.where(v == 0.0, 0.0, v)
+    bits = lax.bitcast_convert_type(v, jnp.uint64)
+    sign = (bits >> jnp.uint64(63)).astype(bool)
+    mapped = jnp.where(sign, ~bits, bits | (jnp.uint64(1) << jnp.uint64(63)))
+    iota = jnp.arange(v.shape[0], dtype=jnp.int32)
+    _, perm = lax.sort((mapped, iota), dimension=0, is_stable=True, num_keys=1)
+    return perm
+
+
+def _aggregate_ranks_traced(scores, weights, n_sources, mul):
+    """Replay ``acquisition.aggregate_ranks`` on an (S, N) score matrix.
+
+    ranks_s is the inverse permutation of the stable descending argsort;
+    instead of materializing it (a second argsort), each source's weighted
+    ranks scatter directly into the aggregate at its sorted positions. The
+    scatters run in source order with a data dependency between them, so
+    every element accumulates w_s * rank_s in numpy's exact add sequence
+    (s = 0 initializes via set, preserving the sign of a +/-0 first term).
+    """
+    perm = _sort_perm_desc(scores)
+    n = scores.shape[1]
+    iota_f = jnp.arange(n, dtype=jnp.float64)
+    agg = jnp.zeros(n, dtype=jnp.float64)
+    agg = agg.at[perm[0]].set(mul(weights[0], iota_f), unique_indices=True)
+    for s in range(1, n_sources):
+        agg = agg.at[perm[s]].add(mul(weights[s], iota_f), unique_indices=True)
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# device-side pool draw from SpacePlane transform tables
+# ---------------------------------------------------------------------------
+
+_K_FLOAT, _K_INT, _K_CAT, _K_BOOL, _K_CONST = 0, 1, 2, 3, 4
+
+
+def _unit_col(sig_j, tab, u):
+    """One knob column: unit draw -> restriction-CDF value -> unit encode.
+
+    Replays ``SpacePlane._quantile_col`` followed by the clipped
+    ``_to_unit_col`` (the exact host pool construction, so device pools
+    have the host pools' distribution — the draws themselves come from the
+    jax PRNG, see the CHANGES SEED NOTE).
+    """
+    kind, is_log, transformed, degenerate, zero_span, size = sig_j
+    if kind == _K_CONST:
+        return jnp.broadcast_to(tab[0][0], u.shape)
+    if kind in (_K_FLOAT, _K_INT):
+        ga, gb, cum, mid, scal = tab
+        P = size
+        if degenerate:
+            v = mid[jnp.minimum((u * P).astype(jnp.int64), P - 1)]
+        else:
+            i = jnp.clip(jnp.searchsorted(cum, u, side="right") - 1, 0, P - 1)
+            span = cum[i + 1] - cum[i]
+            frac = jnp.where(span > 0, (u - cum[i]) / jnp.where(span > 0, span, 1.0), 0.0)
+            g = ga[i] + frac * (gb[i] - ga[i])
+            v = jnp.exp(g) if transformed else g
+        if kind == _K_INT:
+            v = jnp.clip(jnp.round(v), scal[2], scal[3])
+        if zero_span:
+            return jnp.zeros_like(v)
+        t = jnp.log(v) if is_log else v
+        return jnp.clip((t - scal[0]) / scal[1], 0.0, 1.0)
+    act = tab[0]
+    m = act.shape[0]
+    pick = jnp.minimum((u * m).astype(jnp.int64), m - 1)
+    a = act[pick].astype(jnp.float64)
+    if kind == _K_CAT:
+        return (a + 0.5) / size
+    return jnp.where(a != 0, 0.75, 0.25)
+
+
+def _draw_unit_pool(key, sig, cols, n):
+    """(n, D) unit-space pool: uniform half + per-knob-stratified LHS half.
+
+    LHS strata are shuffled by a random LCG bijection ``p(i) = (a*i + b)
+    mod m`` per knob (a odd => a bijection on Z_m for the power-of-two
+    strata count the bucket protocol guarantees) — a rank-1-lattice-style
+    stratification ~45x cheaper than ``jax.random.permutation`` on XLA:CPU
+    while keeping exactly one sample per stratum per knob. Non-bucketed
+    strata counts fall back to true per-knob permutations.
+    """
+    D = len(sig)
+    n_lhs = n // 2
+    n_uni = n - n_lhs
+    k_uni, k_ab, k_frac = jax.random.split(key, 3)
+    u_uni = jax.random.uniform(k_uni, (n_uni, D), dtype=jnp.float64)
+    frac = jax.random.uniform(k_frac, (n_lhs, D), dtype=jnp.float64)
+    if n_lhs > 0 and (n_lhs & (n_lhs - 1)) == 0:
+        ab = jax.random.bits(k_ab, (2, D), dtype=jnp.uint32)
+        i = jnp.arange(n_lhs, dtype=jnp.uint32)[:, None]
+        p = (i * (ab[0] | jnp.uint32(1)) + ab[1]) & jnp.uint32(n_lhs - 1)
+        strata = p.astype(jnp.float64)
+    else:
+        keys = jax.random.split(k_ab, max(D, 1))
+        strata = jnp.stack(
+            [jax.random.permutation(keys[j], n_lhs) for j in range(D)], axis=1
+        ).astype(jnp.float64)
+    lhs = (strata + frac) / n_lhs
+    out = []
+    for j, s in enumerate(sig):
+        u = jnp.concatenate([u_uni[:, j], lhs[:, j]])
+        out.append(_unit_col(s, cols[j], u))
+    return jnp.stack(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# merged QuickScorer descent (bitvector tables across every source's trees)
+# ---------------------------------------------------------------------------
+
+_ONES = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def build_qs_plan(feat, thr, child, mean, var, roots, d):
+    """Host-side QuickScorer tables for a fused multi-source arena, or None.
+
+    Same encoding as ``chain.build_chain_plan`` (leaf ordinals left-to-right,
+    per-node masks clearing the left subtree's leaf span, per-feature sorted
+    thresholds prefix-ANDed into false-set tables) but merged across ALL
+    sources' trees into one table set: the tree axis spans every source, so
+    a single searchsorted + AND chain per feature routes the whole pool
+    through the whole arena. Rank ``r = #(thr < v)`` replays the descent's
+    exact ``v > thr`` float comparisons, so leaf routing — and therefore
+    every downstream float — is bit-identical to the gather descent.
+
+    Declines (returns None) when a tree exceeds 64 leaves or splits outside
+    the d-dim space; callers fall back to the gather/pallas descent.
+    """
+    T = len(roots)
+    nodes_by_feat = [[] for _ in range(d)]
+    leaf_mean, leaf_var = [], []
+    leaf_offs = np.empty(T, dtype=np.int64)
+    for t in range(T):
+        base = len(leaf_mean)
+        leaf_offs[t] = base
+        stack = [(int(roots[t]), False)]
+        spans = {}
+        while stack:
+            n, expanded = stack.pop()
+            if child[2 * n] == n:  # leaf: self-loop encoding
+                spans[n] = (len(leaf_mean) - base, len(leaf_mean) - base + 1)
+                leaf_mean.append(float(mean[n]))
+                leaf_var.append(float(var[n]))
+                continue
+            if not expanded:
+                stack.append((n, True))
+                stack.append((int(child[2 * n + 1]), False))
+                stack.append((int(child[2 * n]), False))
+                continue
+            lo, mid = spans[int(child[2 * n])]
+            _, hi = spans[int(child[2 * n + 1])]
+            spans[n] = (lo, hi)
+            if hi > 64 or int(feat[n]) >= d:
+                return None
+            span = np.uint64(((1 << (mid - lo)) - 1) << lo)
+            nodes_by_feat[int(feat[n])].append(
+                (float(thr[n]), t, np.uint64(~span & _ONES))
+            )
+    thrs, tables = [], []
+    for j in range(d):
+        nds = sorted(nodes_by_feat[j], key=lambda z: z[0])
+        tab = np.full((len(nds) + 1, T), _ONES, dtype=np.uint64)
+        for r, (_, t, m) in enumerate(nds):
+            tab[r + 1] = tab[r]
+            tab[r + 1, t] &= m
+        thrs.append(np.array([z[0] for z in nds]))
+        tables.append(tab)
+    return (tuple(thrs), tuple(tables), np.asarray(leaf_mean),
+            np.asarray(leaf_var), leaf_offs)
+
+
+def _qs_leaf_stats(qs, X):
+    """Traced QuickScorer eval: (T, N) leaf means/vars for a unit pool.
+
+    One searchsorted per feature ranks the whole column, the prefix tables
+    turn ranks into per-tree false-node words, and the AND chain isolates
+    each tree's exit leaf as the lowest set bit (ordinal via popcount of
+    ``lsb - 1``). Replaces O(T * depth) random gathers with D cache-resident
+    table lookups + D word-ANDs per row.
+    """
+    thrs, tabs, lm, lv, offs = qs
+    w = None
+    for j in range(len(thrs)):
+        if thrs[j].shape[0] == 0:
+            continue
+        r = jnp.searchsorted(thrs[j], X[:, j], side="left")
+        wj = tabs[j][r]
+        w = wj if w is None else w & wj
+    if w is None:  # degenerate forest of root-leaves
+        idx = jnp.broadcast_to(offs[None, :], (X.shape[0], offs.shape[0]))
+    else:
+        lsb = w & (jnp.uint64(0) - w)
+        leaf = lax.population_count(lsb - jnp.uint64(1)).astype(jnp.int64)
+        idx = offs[None, :] + leaf
+    return lm[idx].T, lv[idx].T
+
+
+# ---------------------------------------------------------------------------
+# the fused step
+# ---------------------------------------------------------------------------
+
+
+def _leaf_stats(arena, X, depth, descent):
+    feat, thr, child, mean, var, roots = arena
+    if descent == "pallas":
+        from .kernel import forest_eval_pallas
+
+        interpret = jax.default_backend() == "cpu"
+        return forest_eval_pallas(feat, thr, child, mean, var, roots, X,
+                                  depth, interpret=interpret)
+    nid = _descend(feat, thr, child, roots, X, depth)
+    return mean[nid], var[nid]
+
+
+def _step_body(key, cols, X, arena, qs, ystats, incumbents, weights, n_valid,
+               zi, *, n_pool, depth, n_sources, tps, k, sig, descent):
+    if X is None:
+        X = _draw_unit_pool(key, sig, cols, n_pool)
+    mul = _seal_mul(zi)
+    div = _seal_div(zi)
+    kern = _kernels(zi)
+    if descent == "qs":
+        m_leaf, v_leaf = _qs_leaf_stats(qs, X)
+    else:
+        m_leaf, v_leaf = _leaf_stats(arena, X, depth, descent)
+    y_means, y_stds, y_stds2 = ystats
+    means, vars_ = [], []
+    for s in range(n_sources):
+        a = s * tps
+        mn, vr = _combine_source(m_leaf[a:a + tps], v_leaf[a:a + tps],
+                                 y_means[s], y_stds[s], y_stds2[s], mul, div)
+        means.append(mn)
+        vars_.append(vr)
+    means = jnp.stack(means)
+    vars_ = jnp.stack(vars_)
+    scores = kern["ei"](means, vars_, incumbents[:, None])
+    valid = jnp.arange(X.shape[0]) < n_valid
+    # padding: EI = -1 < 0 <= any real EI, appended after real rows =>
+    # real rows keep their exact unpadded ranks under the stable sort
+    scores = jnp.where(valid[None, :], scores, -1.0)
+    agg = _aggregate_ranks_traced(scores, weights, n_sources, mul)
+    agg = jnp.where(valid, agg, jnp.inf)
+    idx = _sort_perm_asc1d(agg)[:k]
+    return idx, jnp.take(X, idx, axis=0), jnp.take(agg, idx)
+
+
+@functools.partial(
+    jax.jit if jax is not None else lambda f, **kw: f,
+    static_argnames=("n_pool", "depth", "n_sources", "tps", "k", "sig", "descent"),
+)
+def _propose_jit(key, cols, X, arena, qs, ystats, incumbents, weights,
+                 n_valid, zi, *, n_pool, depth, n_sources, tps, k, sig,
+                 descent):
+    return _step_body(key, cols, X, arena, qs, ystats, incumbents, weights,
+                      n_valid, zi, n_pool=n_pool, depth=depth,
+                      n_sources=n_sources, tps=tps, k=k, sig=sig,
+                      descent=descent)
+
+
+@functools.partial(
+    jax.jit if jax is not None else lambda f, **kw: f,
+    static_argnames=("n_pool", "depth", "n_sources", "tps", "k", "sig",
+                     "descent", "steps"),
+)
+def _propose_scan_jit(key, cols, arena, qs, ystats, incumbents, weights, zi,
+                      *, n_pool, depth, n_sources, tps, k, sig, descent, steps):
+    n_valid = jnp.asarray(n_pool, dtype=jnp.int64)
+
+    def body(carry, _):
+        carry, sub = jax.random.split(carry)
+        out = _step_body(sub, cols, None, arena, qs, ystats, incumbents,
+                         weights, n_valid, zi, n_pool=n_pool, depth=depth,
+                         n_sources=n_sources, tps=tps, k=k, sig=sig,
+                         descent=descent)
+        return carry, out
+
+    key, outs = lax.scan(body, key, None, length=steps)
+    return key, outs
+
+
+def propose_step(key, cols, arena, ystats, incumbents, weights, zi,
+                 *, n_pool, depth, n_sources, tps, k, sig, descent="jax",
+                 X=None, n_valid=None, qs=None):
+    """One fused propose step. ``X=None`` draws the pool on device from
+    ``key``; an uploaded ``X`` (host pool mode) pins the candidates so the
+    selection is bit-identical to the staged numpy path. ``descent="qs"``
+    routes leaves through the merged QuickScorer tables in ``qs`` (from
+    :func:`build_qs_plan`, uploaded). Returns (idx, X[idx], agg[idx]),
+    each length ``k``."""
+    if n_valid is None:
+        n_valid = n_pool
+    return _propose_jit(key, cols, X, arena, qs, ystats, incumbents, weights,
+                        jnp.asarray(n_valid, dtype=jnp.int64), zi,
+                        n_pool=n_pool, depth=depth, n_sources=n_sources,
+                        tps=tps, k=k, sig=sig, descent=descent)
+
+
+def propose_scan(key, cols, arena, ystats, incumbents, weights, zi, *,
+                 n_pool, depth, n_sources, tps, k, sig, descent="jax",
+                 steps=1, qs=None):
+    """``steps`` fused propose iterations under one ``lax.scan``, splitting
+    the PRNG key per step. Returns (next_key, (idx, X_sel, agg_sel)) with a
+    leading ``steps`` axis on each output."""
+    return _propose_scan_jit(key, cols, arena, qs, ystats, incumbents,
+                             weights, zi, n_pool=n_pool, depth=depth,
+                             n_sources=n_sources, tps=tps, k=k, sig=sig,
+                             descent=descent, steps=steps)
+
+
+# ---------------------------------------------------------------------------
+# host-callable, bucket-padded wrappers (bit-equivalence surface for tests)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit if jax is not None else lambda f: f)
+def _ei_pad_jit(mean, var, best, zi):
+    return _kernels(zi)["ei"](mean, var, best)
+
+
+@functools.partial(
+    jax.jit if jax is not None else lambda f, **kw: f,
+    static_argnames=("n_sources",),
+)
+def _ranks_pad_jit(scores, weights, zi, *, n_sources):
+    return _aggregate_ranks_traced(scores, weights, n_sources, _seal_mul(zi))
+
+
+def ei_host(mean, var, best) -> np.ndarray:
+    """Jax EI, padded to the pool bucket; bit-identical (x64) to
+    ``acquisition.expected_improvement``."""
+    mean = np.asarray(mean, dtype=float)
+    var = np.asarray(var, dtype=float)
+    best = np.asarray(best, dtype=float)
+    shape = np.broadcast_shapes(mean.shape, var.shape, best.shape)
+    mf = np.broadcast_to(mean, shape).reshape(-1)
+    vf = np.broadcast_to(var, shape).reshape(-1)
+    bf = np.broadcast_to(best, shape).reshape(-1)
+    n = max(mf.size, 1)
+    bucket = pool_bucket(n)
+    mp = np.zeros(bucket)
+    vp = np.ones(bucket)
+    bp = np.zeros(bucket)
+    mp[:mf.size], vp[:vf.size], bp[:bf.size] = mf, vf, bf
+    with _x64():
+        zi = jnp.zeros((), dtype=jnp.uint64)
+        out = _ei_pad_jit(jnp.asarray(mp), jnp.asarray(vp), jnp.asarray(bp), zi)
+        return np.asarray(out)[:mf.size].reshape(shape)
+
+
+def aggregate_ranks_host(scores, weights) -> np.ndarray:
+    """Jax rank aggregation, padded to the pool bucket with -inf scores
+    (strictly below any finite score, appended last => real columns keep
+    their exact unpadded ranks); bit-identical to
+    ``acquisition.aggregate_ranks`` for finite scores."""
+    scores = np.atleast_2d(np.asarray(scores, dtype=float))
+    if scores.size == 0:
+        raise ValueError("no scores to aggregate")
+    s, n = scores.shape
+    bucket = pool_bucket(n)
+    sp = np.full((s, bucket), -np.inf)
+    sp[:, :n] = scores
+    w = np.asarray(weights, dtype=float)
+    with _x64():
+        zi = jnp.zeros((), dtype=jnp.uint64)
+        agg = _ranks_pad_jit(jnp.asarray(sp), jnp.asarray(w), zi, n_sources=s)
+        return np.asarray(agg)[:n]

@@ -1,0 +1,64 @@
+"""Chain-plan fallback contract: every decline carries an explicit reason.
+
+``build_chain_plan`` returns None when the bitvector encoding does not
+apply; the batched Shapley plane then falls back to the composite-tensor
+path. These tests pin the decline reasons (so a silent behavioral change in
+the applicability rules shows up as a reason-string diff) and check the
+fallback actually produces attributions on a >64-leaf forest.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ProbabilisticRandomForest
+from repro.kernels.forest_eval.chain import build_chain_plan, chain_decline_reason
+
+
+def _fit_prf(n, d, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    X = rng.random((n, d))
+    y = rng.random(n)
+    return ProbabilisticRandomForest(seed=seed, **kw).fit(X, y)
+
+
+def test_decline_d_over_64():
+    m = _fit_prf(30, 4, n_trees=3, max_depth=3)
+    assert build_chain_plan(m, 65) is None
+    assert "> 64 prefix-mask bits" in chain_decline_reason()
+
+
+def test_decline_not_packable():
+    assert build_chain_plan(object(), 4) is None
+    assert chain_decline_reason() == "not a packable forest"
+
+
+def test_decline_leaf_overflow_and_fallback():
+    # deep trees on plentiful data exceed 64 leaves per tree
+    m = _fit_prf(600, 4, n_trees=3, max_depth=12, min_samples_split=2)
+    leaves = max(
+        sum(1 for nd in t.nodes if nd.feature < 0) for t in m.trees
+    )
+    assert leaves > 64, "fixture failed to grow a >64-leaf tree"
+    assert build_chain_plan(m, 4) is None
+    assert "leaf word" in chain_decline_reason()
+
+    # the batched plane still attributes via the composite-tensor fallback,
+    # bit-identical to the per-chain loop path
+    from repro.core import draw_permutations, shapley_values_batch
+
+    rng = np.random.default_rng(1)
+    Xq = rng.random((3, 4))
+    bg = rng.random((8, 4))
+    perms = draw_permutations(4, 4, rng)
+    loop = shapley_values_batch(m.predict_mean, Xq, bg, perms=perms, backend="loop")
+    batched = shapley_values_batch(m.predict_mean, Xq, bg, perms=perms, model=m)
+    assert np.array_equal(loop, batched)
+
+
+def test_success_clears_reason():
+    m = _fit_prf(40, 4, n_trees=3, max_depth=3)
+    # force a decline first so a stale reason would be visible
+    assert build_chain_plan(m, 65) is None
+    assert chain_decline_reason()
+    assert build_chain_plan(m, 4) is not None
+    assert chain_decline_reason() == ""

@@ -1,0 +1,281 @@
+"""Fused on-device propose step: bit-equivalence and routing contracts.
+
+The jax path re-implements EI (Cephes exp/ndtr ports behind FMA/FTZ/
+reciprocal-rewrite barriers) and weighted rank aggregation inside one jitted
+program; these tests pin x64 bit-identity against the numpy reference at
+awkward pool sizes (255/256/257 straddle the minimum padding bucket,
+65535/65536 the large buckets), degenerate variances, and tied scores — then
+check the engine/generator/MFTune layers preserve selection identity in
+host-pool mode and stay sane in device-pool mode.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BoolKnob,
+    CatKnob,
+    ConfigSpace,
+    FloatKnob,
+    IntKnob,
+    Intervals,
+    KnowledgeBase,
+    ProbabilisticRandomForest,
+    ProposeEngine,
+    aggregate_ranks,
+    aggregate_ranks_jax,
+    expected_improvement,
+    expected_improvement_jax,
+    plane_cache_stats,
+    score_sources,
+    set_plane_cache_size,
+)
+
+jax = pytest.importorskip("jax")
+
+
+def _space():
+    return ConfigSpace([
+        FloatKnob("f1", 0.1, 10.0, log=True),
+        FloatKnob("f2", -5.0, 5.0),
+        IntKnob("i1", 1, 64, log=True),
+        IntKnob("i2", 0, 9),
+        CatKnob("c1", ["a", "b", "c"]),
+        BoolKnob("b1"),
+    ])
+
+
+def _models(space, n_sources=3, n_obs=40, seed0=0):
+    rng = np.random.default_rng(seed0)
+    D = space.dim
+    models = []
+    for s in range(n_sources):
+        X = rng.random((n_obs, D))
+        y = rng.random(n_obs) * 10 + s
+        models.append(ProbabilisticRandomForest(n_trees=10, seed=s).fit(X, y))
+    return models
+
+
+# ------------------------------------------------------------ EI bit-identity
+
+
+@pytest.mark.parametrize("n", [255, 256, 257, 65535, 65536])
+def test_ei_bitwise_identical(n):
+    rng = np.random.default_rng(n)
+    mean = rng.normal(5.0, 3.0, n)
+    var = rng.gamma(1.0, 2.0, n)
+    best = 4.0
+    ref = expected_improvement(mean, var, best)
+    got = expected_improvement_jax(mean, var, best)
+    assert ref.dtype == got.dtype == np.float64
+    assert np.array_equal(ref.view(np.uint64), got.view(np.uint64))
+
+
+def test_ei_bitwise_degenerate_and_extreme():
+    # zero variance hits the floor; huge |z| exercises the erfc tail and the
+    # denormal-flush contract; mixed signs cover both ndtr branches
+    mean = np.array([0.0, 5.0, -5.0, 1e6, -1e6, 3.0, 3.0, 1e-300])
+    var = np.array([0.0, 0.0, 0.0, 1e-8, 1e-8, 1e4, 1e-12, 0.0])
+    for best in (-1e6, -37.0, 0.0, 2.9999999, 3.0, 1e6):
+        ref = expected_improvement(mean, var, best)
+        got = expected_improvement_jax(mean, var, best)
+        assert np.array_equal(ref.view(np.uint64), got.view(np.uint64)), best
+
+
+# ------------------------------------------------- rank-agg bit-identity
+
+
+@pytest.mark.parametrize("n", [255, 256, 257, 65536])
+def test_aggregate_ranks_bitwise_identical(n):
+    rng = np.random.default_rng(n)
+    scores = rng.random((3, n))
+    # force ties so the stable argsort order is load-bearing
+    scores[0, : n // 2] = scores[0, 0]
+    scores[1] = np.round(scores[1], 1)
+    w = np.array([0.5, 0.3, 0.2])
+    ref = aggregate_ranks(scores, w)
+    got = aggregate_ranks_jax(scores, w)
+    assert np.array_equal(
+        np.asarray(ref, dtype=np.float64).view(np.uint64),
+        np.asarray(got, dtype=np.float64).view(np.uint64),
+    )
+    # selection order must match exactly even under ties
+    assert np.array_equal(
+        np.argsort(ref, kind="stable"), np.argsort(got, kind="stable")
+    )
+
+
+def test_aggregate_ranks_all_tied():
+    scores = np.ones((2, 300))
+    w = np.array([0.7, 0.3])
+    ref = aggregate_ranks(scores, w)
+    got = aggregate_ranks_jax(scores, w)
+    assert np.array_equal(
+        np.asarray(ref, dtype=np.float64).view(np.uint64),
+        np.asarray(got, dtype=np.float64).view(np.uint64),
+    )
+
+
+# ------------------------------------------------ engine selection identity
+
+
+def _staged_topk(models, pool, incs, ws, n):
+    scores = score_sources(models, pool, incs)
+    agg = aggregate_ranks(scores, np.asarray(ws))
+    return np.argsort(agg, kind="stable")[:n]
+
+
+@pytest.mark.parametrize("descent", ["auto", "qs", "jax", "pallas"])
+def test_score_topk_matches_staged_numpy(descent):
+    space = _space()
+    models = _models(space)
+    rng = np.random.default_rng(7)
+    incs, ws = [5.0, 4.0, 6.0], [0.5, 0.3, 0.2]
+    eng = ProposeEngine(space, seed=0)
+    assert ProposeEngine.fusable(models)
+    for n_pool in (100, 777):
+        pool = rng.random((n_pool, space.dim))
+        ref = _staged_topk(models, pool, incs, ws, 5)
+        got = eng.score_topk(models, pool, incs, ws, 5, descent=descent)
+        assert np.array_equal(ref, got)
+    if descent == "qs":
+        # small fixture trees fit the 64-leaf word: the merged QuickScorer
+        # tables must actually route this, not silently fall back
+        assert any(sig[-1] == "qs" for sig in eng.compiled)
+
+
+def test_jit_cache_growth_bounded():
+    space = _space()
+    models = _models(space)
+    eng = ProposeEngine(space, seed=0)
+    rng = np.random.default_rng(11)
+    # many calls, two shape buckets -> at most two static signatures
+    for n_pool in (300, 300, 500, 400, 510):
+        pool = rng.random((n_pool, space.dim))
+        eng.score_topk(models, pool, [5.0, 4.0, 6.0], [0.5, 0.3, 0.2], 4)
+    assert len(eng.compiled) <= 2
+
+
+# ------------------------------------------------------ device-pool propose
+
+
+def test_device_propose_valid_configs():
+    space = _space()
+    models = _models(space)
+    eng = ProposeEngine(space, seed=0)
+    idx, units, agg = eng.propose(models, [5.0, 4.0, 6.0], [0.5, 0.3, 0.2], 5)
+    assert units.shape[1] == space.dim
+    assert np.all((units >= 0.0) & (units <= 1.0))
+    assert np.all(np.isfinite(agg))
+    batch = space.decode_many(units)
+    for i in range(len(batch)):
+        cfg = batch[i]
+        for k in space.knobs:
+            v = cfg[k.name]
+            if isinstance(k, FloatKnob):
+                assert k.lo <= v <= k.hi
+            elif isinstance(k, IntKnob):
+                assert isinstance(v, (int, np.integer)) and k.lo <= v <= k.hi
+            elif isinstance(k, CatKnob):
+                assert v in k.choices
+            else:
+                assert isinstance(v, (bool, np.bool_))
+
+
+def test_device_propose_respects_restrictions():
+    space = _space()
+    models = _models(space)
+    sub = space.restrict(
+        keep=["f1", "i1", "c1", "b1"],
+        ranges={"f1": Intervals([(0.5, 1.0), (4.0, 8.0)])},
+        cat_subsets={"c1": ["a", "c"]},
+    )
+    eng = ProposeEngine(space, seed=0, pool_size=512)
+    _, units, _ = eng.propose(
+        models, [5.0, 4.0, 6.0], [0.5, 0.3, 0.2], 8, sample_space=sub
+    )
+    batch = space.decode_many(units)
+    f2_default = space.by_name["f2"].default_value()
+    i2_default = space.by_name["i2"].default_value()
+    for i in range(len(batch)):
+        cfg = batch[i]
+        assert (0.5 <= cfg["f1"] <= 1.0) or (4.0 <= cfg["f1"] <= 8.0)
+        assert cfg["c1"] in ("a", "c")
+        # dropped knobs pin to full-space defaults
+        assert cfg["f2"] == f2_default
+        assert cfg["i2"] == i2_default
+
+
+def test_device_propose_key_threading_deterministic():
+    space = _space()
+    models = _models(space)
+    a = ProposeEngine(space, seed=0)
+    b = ProposeEngine(space, seed=0)
+    _, ua1, _ = a.propose(models, [5.0], [1.0], 4)
+    _, ua2, _ = a.propose(models, [5.0], [1.0], 4)
+    _, ub1, _ = b.propose(models, [5.0], [1.0], 4)
+    _, ub2, _ = b.propose(models, [5.0], [1.0], 4)
+    assert np.array_equal(ua1, ub1) and np.array_equal(ua2, ub2)
+    assert not np.array_equal(ua1, ua2)  # the key advances between steps
+
+
+# --------------------------------------------------------- plane cache LRU
+
+
+def test_plane_cache_stats_and_resize():
+    space = _space()
+    models = _models(space)
+    eng = ProposeEngine(space, seed=0)
+    prev = set_plane_cache_size(2)
+    try:
+        s0 = plane_cache_stats()
+        assert s0["max_entries"] == 2
+        pool = np.random.default_rng(0).random((64, space.dim))
+        eng.score_topk(models, pool, [5.0, 4.0, 6.0], [0.5, 0.3, 0.2], 3)
+        s1 = plane_cache_stats()
+        assert s1["misses"] == s0["misses"] + 1
+        eng.score_topk(models, pool, [5.0, 4.0, 6.0], [0.5, 0.3, 0.2], 3)
+        s2 = plane_cache_stats()
+        assert s2["hits"] == s1["hits"] + 1
+        assert s2["entries"] <= 2
+    finally:
+        set_plane_cache_size(prev)
+
+
+# ----------------------------------------------- MFTune trajectory identity
+
+
+def _observations(**opt_kw):
+    from repro.core import MFTune, MFTuneOptions
+    from repro.sparksim import SparkWorkload, TaskSpec, generate_history
+    from repro.tuneapi import Budget
+
+    kb = KnowledgeBase()
+    kb.add_task(
+        generate_history(
+            TaskSpec("tpch", 100, "A").workload(), n_obs=12, n_init=5, seed=3
+        ),
+        persist=False,
+    )
+    wl = SparkWorkload("tpch", 100, "A")
+    res = MFTune(wl, kb, MFTuneOptions(seed=0, **opt_kw)).run(Budget(8 * 3600.0))
+    obs = kb.get(wl.task_id).observations
+    sig = [
+        (o.performance, o.fidelity, tuple(sorted(o.config.items()))) for o in obs
+    ]
+    traj = [
+        (p.time, p.best, tuple(sorted(p.config.items()))) for p in res.trajectory
+    ]
+    return sig, traj, res
+
+
+def test_mftune_identical_across_acquisition_backends():
+    ref_sig, ref_traj, ref_res = _observations()
+    got_sig, got_traj, got_res = _observations(
+        acquisition_backend="jax", acquisition_pool="host"
+    )
+    assert ref_res.n_evaluations > 10  # the BO loop actually ran
+    assert got_res.plane_cache["misses"] > 0  # the fused path actually ran
+    assert ref_sig == got_sig
+    assert ref_traj == got_traj
+    assert ref_res.best_performance == got_res.best_performance
