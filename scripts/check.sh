@@ -19,10 +19,16 @@ python -m pytest -x -q tests/test_space_plane.py tests/test_tree_frontier.py
 echo "== batched-shapley == per-chain-loop equivalence gate =="
 python -m pytest -x -q tests/test_shapley_batched.py
 
+echo "== rung-table == scalar-hyperband equivalence gate =="
+python -m pytest -x -q tests/test_rung_table.py
+
+echo "== hb-schedule bench smoke (promotion equivalence + allocation-growth guard) =="
+python -m benchmarks.bench_hb_schedule --smoke > /dev/null
+
 echo "== tier-1: pytest -x -q (rest of the fast suite) =="
 python -m pytest -x -q --ignore=tests/test_batch_eval.py --ignore=tests/test_surrogate_packed.py \
   --ignore=tests/test_space_plane.py --ignore=tests/test_tree_frontier.py \
-  --ignore=tests/test_shapley_batched.py
+  --ignore=tests/test_shapley_batched.py --ignore=tests/test_rung_table.py
 
 if [[ "${1:-}" == "--slow" ]]; then
   echo "== slow tier =="

@@ -68,8 +68,25 @@ from .fidelity import (
     partition_fidelities,
     subset_correlation,
 )
-from .generator import CandidateGenerator, SurrogateStore, WarmStartQueue, phase1_config
-from .hyperband import Bracket, HyperbandRunner, Rung, hb_schedule, sh_schedule
+from .generator import (
+    CandidateColumns,
+    CandidateGenerator,
+    SurrogateStore,
+    WarmStartQueue,
+    phase1_config,
+)
+from .hyperband import (
+    Bracket,
+    CostColumns,
+    HyperbandRunner,
+    Rung,
+    RungTable,
+    get_hyperband_backend,
+    hb_schedule,
+    hyperband_backend,
+    set_hyperband_backend,
+    sh_schedule,
+)
 from .mftune import MFTune, MFTuneOptions, TuningResult
 
 __all__ = [
@@ -91,7 +108,10 @@ __all__ = [
     "SpaceCompressor", "compress_space", "extract_promising_regions",
     "FidelityPartition", "collect_query_stats", "early_stop_subset",
     "greedy_query_subset", "partition_fidelities", "subset_correlation",
-    "CandidateGenerator", "SurrogateStore", "WarmStartQueue", "phase1_config",
-    "Bracket", "HyperbandRunner", "Rung", "hb_schedule", "sh_schedule",
+    "CandidateColumns", "CandidateGenerator", "SurrogateStore", "WarmStartQueue",
+    "phase1_config",
+    "Bracket", "HyperbandRunner", "Rung", "RungTable", "CostColumns",
+    "hb_schedule", "sh_schedule",
+    "get_hyperband_backend", "set_hyperband_backend", "hyperband_backend",
     "MFTune", "MFTuneOptions", "TuningResult",
 ]

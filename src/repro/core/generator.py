@@ -36,7 +36,54 @@ from .surrogate import Surrogate, make_forest
 
 Config = Dict[str, Any]
 
-__all__ = ["CandidateGenerator", "SurrogateStore", "WarmStartQueue", "phase1_config"]
+__all__ = [
+    "CandidateColumns",
+    "CandidateGenerator",
+    "SurrogateStore",
+    "WarmStartQueue",
+    "phase1_config",
+]
+
+
+class CandidateColumns(Sequence):
+    """Provisioned candidates: warm-start dicts + one columnar BO batch.
+
+    Indexes like a list of Config dicts (what ``HyperbandRunner`` needs),
+    but the BO rows stay columnar until first touched — and each row
+    materializes at most once (memoized), so rung bookkeeping can reference
+    candidates purely by index column across rungs without re-building
+    dicts, and the batch's canonical value matrix / unit encoding remain
+    available to downstream consumers (``.batch``).
+    """
+
+    __slots__ = ("head", "batch", "_limit", "_memo")
+
+    def __init__(self, head: Sequence[Config], batch: ConfigBatch, limit: Optional[int] = None):
+        self.head = list(head)
+        self.batch = batch
+        n = len(self.head) + len(batch)
+        self._limit = n if limit is None else min(int(limit), n)
+        self._memo: Dict[int, Config] = {}
+
+    def __len__(self) -> int:
+        return self._limit
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        i = int(i)
+        if i < 0:
+            i += self._limit
+        if not 0 <= i < self._limit:
+            raise IndexError(i)
+        if i < len(self.head):
+            return self.head[i]
+        j = i - len(self.head)
+        got = self._memo.get(j)
+        if got is None:
+            got = self.batch[j]
+            self._memo[j] = got
+        return got
 
 
 def phase1_config(weights: TaskWeights, tasks: Dict[str, TaskRecord]) -> Optional[Config]:
@@ -308,6 +355,37 @@ class CandidateGenerator:
             got = self._recommend_fused(n, active, incumbents, exclude)
             if got is not None:
                 return got
+        return self._recommend_pool_batch(n, active, incumbents, exclude).materialize()
+
+    def recommend_batch(
+        self,
+        n: int,
+        sources: Sequence[SurrogateSource],
+        incumbents: Sequence[Config] = (),
+        exclude: Sequence[Config] = (),
+    ) -> ConfigBatch:
+        """``recommend`` returning the top-n as one columnar ``ConfigBatch``.
+
+        Identical selection (materializing the batch yields the same dicts
+        in the same order as ``recommend``), but no dict materialization on
+        the staged path — rung-table provisioning and the future async-ASHA
+        service layer consume the index columns directly.
+        """
+        active = [s for s in sources if s.weight > 0]
+        if active and get_acquisition_backend() != "numpy":
+            got = self._recommend_fused(n, active, incumbents, exclude)
+            if got is not None:
+                return ConfigBatch.from_configs(self.space, got)
+        return self._recommend_pool_batch(n, active, incumbents, exclude)
+
+    def _recommend_pool_batch(
+        self,
+        n: int,
+        active: Sequence[SurrogateSource],
+        incumbents: Sequence[Config],
+        exclude: Sequence[Config],
+    ) -> ConfigBatch:
+        """Staged numpy path: pool → dedup → score → stable top-n, columnar."""
         pool = self._candidate_pool(incumbents)
         # de-duplicate against already-evaluated configs (exact canonical
         # row match; the exclusion keys are cached across calls)
@@ -318,12 +396,12 @@ class CandidateGenerator:
                 pool = pool.take(np.flatnonzero(keep))
         if not active:
             order = self._rng.permutation(len(pool))
-            return [pool[int(i)] for i in order[:n]]
+            return pool.take(order[:n])
         X = pool.unit()
         scores = score_sources([s.model for s in active], X, [s.incumbent for s in active])
         agg = aggregate_ranks(scores, [s.weight for s in active])
         order = np.argsort(agg, kind="stable")
-        return [pool[int(i)] for i in order[:n]]
+        return pool.take(order[:n])
 
     # -------------------------------------------------------- fused propose
     @property

@@ -37,8 +37,8 @@ from .fidelity import (
     early_stop_subset,
     partition_fidelities,
 )
-from .generator import CandidateGenerator, WarmStartQueue, phase1_config
-from .hyperband import HyperbandRunner, Rung
+from .generator import CandidateColumns, CandidateGenerator, WarmStartQueue, phase1_config
+from .hyperband import HyperbandRunner, Rung, RungTable
 from .knowledge import KnowledgeBase, Observation, TaskRecord
 from .similarity import SimilarityEngine, TaskWeights
 from .space import ConfigSpace, space_backend as _space_backend_ctx
@@ -82,6 +82,11 @@ class MFTuneOptions:
                                                # on-device draws (SEED NOTE),
                                                # "host" = upload numpy pool
                                                # (bit-identical selections)
+    hyperband_backend: Optional[str] = None    # bracket bookkeeping; None =
+                                               # module default ("table" rung
+                                               # columns), "loop" = scalar
+                                               # reference (bit-identical
+                                               # survivor sets)
 
 
 @dataclass
@@ -103,6 +108,8 @@ class TuningResult:
     overheads: Dict[str, float] = field(default_factory=dict)
     surrogate_cache: Dict[str, int] = field(default_factory=dict)  # store hit/miss counters
     plane_cache: Dict[str, int] = field(default_factory=dict)      # fused-plane LRU counters
+    rung_tables: List["RungTable"] = field(default_factory=list)   # per-bracket promotion
+                                                                   # state (table backend)
 
 
 class MFTune:
@@ -140,7 +147,7 @@ class MFTune:
         self.ws_queue = WarmStartQueue()
         self.hb = HyperbandRunner(
             R=self.opt.R, eta=self.opt.eta, early_stop_factor=self.opt.early_stop_factor,
-            seed=self.opt.seed,
+            seed=self.opt.seed, backend=self.opt.hyperband_backend,
         )
         self.partition: Optional[FidelityPartition] = None
         self._mfo_activation_time: Optional[float] = None
@@ -191,28 +198,32 @@ class MFTune:
         """Charge the budget and record one evaluation result."""
         budget.charge(res.elapsed, label=f"eval@{delta:.3f}")
         self._n_eval += 1
-        perf = res.aggregate if not res.failed else float("inf")
+        # a NaN aggregate is neither failed nor inf: it would poison the rung
+        # promotion sort and target.best(), so coerce non-finite to failure
+        failed = bool(res.failed) or not np.isfinite(res.aggregate)
+        perf = res.aggregate if not failed else float("inf")
+        # best-so-far *before* this observation enters the KB: the trajectory
+        # gains a point only on strict improvement (ties used to duplicate)
+        _, prev_best = self._best()
         obs = Observation(
             config=config,
             performance=perf,
             fidelity=delta,
-            per_query_perf=list(res.per_query_latency) if delta >= 1.0 and not res.failed else None,
-            per_query_cost=list(res.per_query_cost) if delta >= 1.0 and not res.failed else None,
+            per_query_perf=list(res.per_query_latency) if delta >= 1.0 and not failed else None,
+            per_query_cost=list(res.per_query_cost) if delta >= 1.0 and not failed else None,
             query_subset=list(subset) if subset is not None else None,
-            failed=res.failed,
+            failed=failed,
             elapsed=res.elapsed,
             time=budget.now,
         )
         self.kb.record(self.target.task_id, obs)
         if delta >= 1.0:
             self._n_full += 1
-            if not res.failed:
-                _, cur_best = self._best()
-                if res.aggregate <= cur_best:
-                    self._trajectory.append(
-                        TrajectoryPoint(time=budget.now, best=res.aggregate, config=config, fidelity=1.0)
-                    )
-        return perf, res.failed, res.elapsed
+            if not failed and perf < prev_best:
+                self._trajectory.append(
+                    TrajectoryPoint(time=budget.now, best=perf, config=config, fidelity=1.0)
+                )
+        return perf, failed, res.elapsed
 
     def _evaluate(
         self, budget: Budget, config: Config, delta: float, cost_cap: Optional[float]
@@ -382,6 +393,7 @@ class MFTune:
             mfo_activation_time=self._mfo_activation_time,
             overheads=dict(self._overheads),
             surrogate_cache=self.gen.cache_stats,
+            rung_tables=list(self.hb.tables),
             plane_cache={
                 **{
                     k: plane_cache_stats()[k] - plane0[k]
@@ -405,7 +417,8 @@ class MFTune:
         t0 = _time.perf_counter()
         sources = self._sources_for_gen(weights)
         incumbent_cfg, _ = self._best()
-        incumbents = [incumbent_cfg] if incumbent_cfg else []
+        # `is not None`: an all-defaults {} incumbent is falsy but real
+        incumbents = [incumbent_cfg] if incumbent_cfg is not None else []
         evaluated = [o.config for o in self.target.observations]
         cands = self.gen.recommend(1, sources, incumbents=incumbents, exclude=evaluated)
         self._charge_overhead("bo_recommend", t0)
@@ -417,7 +430,7 @@ class MFTune:
         bracket = self.hb.next_bracket()
         opt = self.opt
 
-        def provide(n: int, rungs: List[Rung]) -> List[Config]:
+        def provide(n: int, rungs: List[Rung]) -> Sequence[Config]:
             t0 = _time.perf_counter()
             ws: List[Config] = []
             multi_rung = len(rungs) > 1
@@ -428,8 +441,18 @@ class MFTune:
                 ws = self.ws_queue.take(rungs[-1].n)
             sources = self._sources_for_gen(weights)
             incumbent_cfg, _ = self._best()
-            incumbents = [incumbent_cfg] if incumbent_cfg else []
+            # `is not None`: an all-defaults {} incumbent is falsy but real
+            incumbents = [incumbent_cfg] if incumbent_cfg is not None else []
             evaluated = [o.config for o in self.target.observations]
+            if self.hb.backend == "table":
+                # rung-table provisioning: BO candidates stay one columnar
+                # batch; the table indexes (ws rows + batch rows) by column
+                # and materializes dicts only when an evaluation needs them
+                bo_batch = self.gen.recommend_batch(
+                    max(n - len(ws), 0), sources, incumbents=incumbents, exclude=evaluated + ws
+                )
+                self._charge_overhead("bo_recommend", t0)
+                return CandidateColumns(ws, bo_batch, limit=n)
             bo = self.gen.recommend(
                 max(n - len(ws), 0), sources, incumbents=incumbents, exclude=evaluated + ws
             )

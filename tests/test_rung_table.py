@@ -1,0 +1,414 @@
+"""Array-native rung table vs the scalar Hyperband reference, plus the
+promotion/incumbent/non-finite/trajectory bugfixes (ISSUE 8).
+
+The table backend must replay the fixed scalar loop bit-for-bit: same
+survivor sets (stable tie order), same evaluation order, same cost caps,
+same final-rung outcomes — in both scalar-evaluate and batched-rung modes —
+and the MFTune observation stream + trajectory must be identical across
+``hyperband_backend`` values.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Bracket,
+    CandidateColumns,
+    ConfigBatch,
+    ConfigSpace,
+    CostColumns,
+    FloatKnob,
+    HyperbandRunner,
+    KnowledgeBase,
+    Observation,
+    ProbabilisticRandomForest,
+    Rung,
+    RungTable,
+    TaskRecord,
+    hb_schedule,
+    hyperband_backend,
+    set_hyperband_backend,
+    sh_schedule,
+)
+from repro.core.generator import SurrogateSource
+from repro.core.similarity import TaskWeights
+
+
+# --------------------------------------------------------- schedule exactness
+
+
+def test_hb_schedule_table1_r9_eta3():
+    # paper defaults: R=9, eta=3 -> proxy levels 1/9, 1/3, 1
+    got = {b.s: [(r.n, round(r.r, 6)) for r in b.rungs] for b in hb_schedule(9, 3)}
+    assert got == {
+        2: [(9, 1), (3, 3), (1, 9)],
+        1: [(5, 3), (1, 9)],
+        0: [(3, 9)],
+    }
+    deltas = sorted({round(r.delta, 6) for b in hb_schedule(9, 3) for r in b.rungs})
+    assert deltas == [round(1 / 9, 6), round(1 / 3, 6), 1.0]
+
+
+def test_hb_schedule_r16_eta4():
+    got = {b.s: [(r.n, round(r.r, 6)) for r in b.rungs] for b in hb_schedule(16, 4)}
+    assert got == {
+        2: [(16, 1), (4, 4), (1, 16)],
+        1: [(6, 4), (1, 16)],
+        0: [(3, 16)],
+    }
+
+
+def test_sh_schedule_terminal_rung_edge():
+    # R=10, eta=3: r_1 = 10/9 accumulates float error; the final rung must
+    # still terminate at r ~ R (the r >= R - 1e-9 edge), not loop past it
+    rungs = sh_schedule(9, 10 * 3 ** (-2), 10.0, 3)
+    assert len(rungs) == 3
+    assert abs(rungs[-1].r - 10.0) < 1e-8
+    assert rungs[-1].delta == 1.0
+    assert all(r.delta <= 1.0 for r in rungs)
+    # r_1 == R -> a single full-fidelity rung, no promotion
+    only = sh_schedule(4, 9.0, 9.0, 3)
+    assert len(only) == 1 and only[0].n == 4 and only[0].delta == 1.0
+
+
+# ----------------------------------------------------- backend bit-equivalence
+
+
+def _drive(backend, scores, fail_ids=(), batch_mode=False, R=9, eta=3):
+    hb = HyperbandRunner(R=R, eta=eta, seed=0, backend=backend)
+    bracket = hb.brackets[0]
+    log = []
+
+    def provide(n, rungs):
+        return [{"id": i} for i in range(n)]
+
+    def one(cfg):
+        i = cfg["id"]
+        return float(scores[i]), i in fail_ids, 1.0 + 0.1 * i
+
+    def evaluate(cfg, delta, cap):
+        log.append(("eval", cfg["id"], round(delta, 6), cap))
+        return one(cfg)
+
+    def evaluate_batch(cfgs, delta, cap):
+        log.append(("batch", tuple(c["id"] for c in cfgs), round(delta, 6), cap))
+        return [one(c) for c in cfgs]
+
+    hooks = []
+    out = hb.run_bracket(
+        bracket,
+        provide,
+        evaluate,
+        lambda cfg, d, p, f, e: hooks.append((cfg["id"], round(d, 6), p, f, e)),
+        lambda: False,
+        evaluate_batch=evaluate_batch if batch_mode else None,
+    )
+    outcomes = [(o.config["id"], o.performance, o.failed, o.elapsed) for o in out]
+    return hb, outcomes, log, hooks
+
+
+@pytest.mark.parametrize("batch_mode", [False, True])
+@pytest.mark.parametrize(
+    "case",
+    [
+        "plain",       # distinct scores, no failures
+        "ties",        # duplicated scores: stable order is load-bearing
+        "failures",    # failure-heavy rung: promotion quota from len(ok)
+        "all_failed",  # rung with zero successes: bracket stops
+    ],
+)
+def test_table_matches_loop_bit_for_bit(batch_mode, case):
+    rng = np.random.default_rng(5)
+    scores = rng.random(16)
+    fail_ids = ()
+    if case == "ties":
+        scores = np.array([0.5, 0.2, 0.5, 0.2, 0.9, 0.2, 0.5, 0.1, 0.2] + [0.5] * 7)
+    elif case == "failures":
+        fail_ids = (0, 1, 2, 5)
+        scores = np.arange(16, dtype=float)  # low id = better, but 0..2,5 fail
+    elif case == "all_failed":
+        fail_ids = tuple(range(16))
+    ref = _drive("loop", scores, fail_ids, batch_mode)
+    got = _drive("table", scores, fail_ids, batch_mode)
+    assert ref[1] == got[1]  # final-rung outcomes
+    assert ref[2] == got[2]  # evaluation order + fidelities + cost caps
+    assert ref[3] == got[3]  # on_result hook stream
+    # cost history values identical (list vs vectorized columns)
+    hb_ref, hb_got = ref[0], got[0]
+    for key, vals in hb_ref._cost_history.items():
+        assert np.array_equal(np.asarray(vals), hb_got._cost_history.values(key))
+
+
+def test_promotion_quota_counts_only_successes():
+    # 9-config rung, the 4 best-scoring configs fail: quota must be
+    # floor(5 successes / eta) = 1, not floor(9 results / eta) = 3
+    scores = np.arange(9, dtype=float)
+    fail_ids = (0, 1, 2, 3)
+    for backend in ("loop", "table"):
+        hb, outcomes, log, _ = _drive(backend, scores, fail_ids)
+        evaluated_r1 = [e[1] for e in log if e[0] == "eval" and e[2] == round(1 / 3, 6)]
+        assert evaluated_r1 == [4], backend  # only the best *successful* config
+    # and the table records the survivor set explicitly
+    table = hb.tables[0]
+    assert [s.tolist() for s in table.survivors][0] == [4]
+
+
+def test_all_failed_rung_stops_bracket():
+    for backend in ("loop", "table"):
+        _, outcomes, log, _ = _drive(backend, np.arange(9.0), tuple(range(16)))
+        assert outcomes == []
+        assert all(e[2] == round(1 / 9, 6) for e in log), backend  # rung 0 only
+
+
+# ------------------------------------------------------------ RungTable unit
+
+
+def _bracket(n, n_rungs=2):
+    return Bracket(s=0, rungs=[Rung(n=max(n >> i, 1), r=3.0**i, delta=1.0) for i in range(n_rungs)])
+
+
+def test_rung_table_promote_stable_ties():
+    table = RungTable(_bracket(8), [{"id": i} for i in range(8)])
+    scores = np.array([0.3, 0.1, 0.3, 0.1, 0.1, 0.3, 0.2, 0.1])
+    table.record(0, np.arange(8), scores, np.zeros(8, bool), np.ones(8))
+    surv = table.promote(0, 3)
+    # keep = 8 // 3 = 2; ties on 0.1 keep evaluation order -> ids 1, 3
+    assert surv.tolist() == [1, 3]
+    assert table.survivors[0].tolist() == [1, 3]
+
+
+def test_rung_table_rejects_nonfinite_success():
+    table = RungTable(_bracket(4), [{"id": i} for i in range(4)])
+    with pytest.raises(ValueError, match="non-finite"):
+        table.record(0, [0, 1], [np.nan, 1.0], [False, False], [1.0, 1.0])
+    with pytest.raises(ValueError, match="non-finite"):
+        table.record(0, [0], [np.inf], [False], [1.0])
+    # inf on a *failed* row is fine (masked out of promotion)
+    table.record(0, [0, 1], [np.inf, 1.0], [True, False], [1.0, 1.0])
+    assert table.promote(0, 3).tolist() == [1]
+
+
+def test_rung_table_incremental_record_and_clear_reuses_buffers():
+    table = RungTable(_bracket(8), list(range(8)), capacity=4)
+    table.record(0, [0, 1, 2], [3.0, 1.0, 2.0], [False] * 3, [1.0] * 3)
+    table.record(0, [3, 4], [0.5, 9.0], [False, True], [1.0, 1.0])
+    assert len(table) == 5
+    assert table.rows(0).tolist() == [0, 1, 2, 3, 4]
+    assert table.promote(0, 3).tolist() == [3]  # 4 ok rows -> keep 1, best 0.5
+    cap = table.capacity
+    table.clear()
+    assert len(table) == 0 and table.survivors == [] and table.capacity == cap
+    table.record(0, np.arange(5), np.arange(5.0), np.zeros(5, bool), np.ones(5))
+    assert table.capacity == cap  # no regrowth on reuse
+
+
+def test_cost_columns_match_list_medians():
+    cc = CostColumns()
+    rng = np.random.default_rng(0)
+    ref = {}
+    for _ in range(200):
+        key = float(rng.integers(3))
+        v = float(rng.random())
+        cc.append(key, v)
+        ref.setdefault(key, []).append(v)
+    for key, vals in ref.items():
+        assert cc.count(key) == len(vals)
+        assert np.array_equal(cc.values(key), np.asarray(vals))
+        assert cc.median(key) == float(np.median(vals))
+    cc.extend(0.0, [1.0, 2.0])
+    assert cc.count(0.0) == len(ref[0.0]) + 2
+    cc[9.0] = [5.0, 1.0, 3.0]  # dict-style seeding (tests/back-compat)
+    assert cc.median(9.0) == 3.0
+
+
+def test_backend_default_and_context():
+    assert HyperbandRunner().backend == "table"
+    with hyperband_backend("loop"):
+        assert HyperbandRunner().backend == "loop"
+    assert HyperbandRunner().backend == "table"
+    with pytest.raises(ValueError):
+        set_hyperband_backend("bogus")
+
+
+# --------------------------------------------------- candidate provisioning
+
+
+def _space():
+    return ConfigSpace([FloatKnob(f"x{i}", 0.0, 1.0) for i in range(4)])
+
+
+def test_candidate_columns_sequence_semantics():
+    space = _space()
+    head = [{"x0": 0.0, "x1": 0.0, "x2": 0.0, "x3": 0.0}]
+    batch = ConfigBatch(space, np.random.default_rng(0).random((5, 4)))
+    cols = CandidateColumns(head, batch, limit=4)
+    assert len(cols) == 4
+    assert cols[0] is head[0]
+    assert cols[1] == batch[0]
+    assert cols[1] is cols[1]  # batch rows materialize once (memoized)
+    assert cols[-1] == batch[2]
+    assert cols[1:3] == [batch[0], batch[1]]
+    with pytest.raises(IndexError):
+        cols[4]
+    assert list(CandidateColumns(head, batch)) == head + batch.materialize()
+
+
+def test_recommend_batch_matches_recommend():
+    from repro.core import CandidateGenerator
+
+    space = _space()
+    rng = np.random.default_rng(3)
+    models = [
+        ProbabilisticRandomForest(n_trees=5, seed=s).fit(
+            rng.random((20, 4)), rng.random(20)
+        )
+        for s in range(2)
+    ]
+    sources = [
+        SurrogateSource(name=f"s{i}", model=m, weight=0.5, incumbent=0.4)
+        for i, m in enumerate(models)
+    ]
+    inc = [{"x0": 0.5, "x1": 0.5, "x2": 0.5, "x3": 0.5}]
+    ref = CandidateGenerator(space, seed=7).recommend(5, sources, incumbents=inc)
+    got = CandidateGenerator(space, seed=7).recommend_batch(5, sources, incumbents=inc)
+    assert isinstance(got, ConfigBatch)
+    assert got.materialize() == ref
+    # no active sources -> random permutation path, same draws
+    ref0 = CandidateGenerator(space, seed=7).recommend(3, [])
+    got0 = CandidateGenerator(space, seed=7).recommend_batch(3, [])
+    assert got0.materialize() == ref0
+
+
+# ------------------------------------------------- MFTune-level regressions
+
+
+def _mft(tmp_path=None, **opt_kw):
+    from repro.core import MFTune, MFTuneOptions
+    from repro.sparksim import SparkWorkload
+
+    wl = SparkWorkload("tpch", 100, "A")
+    return MFTune(wl, KnowledgeBase(), MFTuneOptions(seed=0, **opt_kw))
+
+
+def _result(latencies, failed=False):
+    from repro.tuneapi import EvalResult
+
+    return EvalResult(
+        per_query_latency=list(latencies),
+        per_query_cost=[1.0] * len(latencies),
+        failed=failed,
+    )
+
+
+def test_record_coerces_nonfinite_to_failure():
+    from repro.tuneapi import Budget
+
+    mft = _mft()
+    budget = Budget(100.0)
+    cfg = dict(mft.space.default())
+    perf, failed, _ = mft._record(budget, cfg, 1.0, None, _result([np.nan, 1.0]))
+    assert failed and perf == float("inf")
+    obs = mft.target.observations[-1]
+    assert obs.failed and obs.performance == float("inf")
+    assert obs.per_query_perf is None
+    assert mft.target.best() is None  # not poisoned by NaN
+    assert mft._trajectory == []
+    # a later finite result is unaffected
+    perf, failed, _ = mft._record(budget, cfg, 1.0, None, _result([2.0, 1.0]))
+    assert not failed and mft.target.best().performance == 3.0
+
+
+def test_trajectory_strict_improvement_no_tie_duplicates():
+    from repro.tuneapi import Budget
+
+    mft = _mft()
+    budget = Budget(100.0)
+    cfg = dict(mft.space.default())
+    mft._record(budget, cfg, 1.0, None, _result([5.0]))
+    mft._record(budget, cfg, 1.0, None, _result([5.0]))  # exact tie: no point
+    mft._record(budget, cfg, 1.0, None, _result([4.0]))
+    mft._record(budget, cfg, 1.0, None, _result([6.0]))
+    assert [p.best for p in mft._trajectory] == [5.0, 4.0]
+
+
+def test_empty_incumbent_config_not_dropped(monkeypatch):
+    """A falsy (all-defaults, {}) incumbent must still reach recommend."""
+    from repro.tuneapi import Budget
+
+    mft = _mft()
+    mft.target.observations.append(
+        Observation(config={}, performance=1.0, fidelity=1.0)
+    )
+    seen = {}
+
+    def fake_recommend(n, sources, incumbents=(), exclude=()):
+        seen["incumbents"] = list(incumbents)
+        return []
+
+    monkeypatch.setattr(mft.gen, "recommend", fake_recommend)
+    mft._run_bo_step(Budget(100.0), TaskWeights(weights={}, similarities={}, used_meta=False))
+    assert seen["incumbents"] == [{}]
+
+
+def test_provide_passes_empty_incumbent_to_recommend_batch(monkeypatch):
+    from repro.tuneapi import Budget
+
+    mft = _mft()
+    assert mft.hb.backend == "table"
+    mft.target.observations.append(
+        Observation(config={}, performance=1.0, fidelity=1.0)
+    )
+    seen = {}
+
+    def fake_recommend_batch(n, sources, incumbents=(), exclude=()):
+        seen["incumbents"] = list(incumbents)
+        return ConfigBatch(mft.space, np.empty((0, mft.space.dim)))
+
+    monkeypatch.setattr(mft.gen, "recommend_batch", fake_recommend_batch)
+    budget = Budget(1.0)
+    budget.charge(2.0, label="drain")  # exhausted: provide runs, no evals
+    mft._run_mfo_bracket(budget, TaskWeights(weights={}, similarities={}, used_meta=False))
+    assert seen["incumbents"] == [{}]
+
+
+# ------------------------------------------ MFTune identity across backends
+
+
+def _observations(**opt_kw):
+    from repro.core import MFTune, MFTuneOptions
+    from repro.sparksim import SparkWorkload, TaskSpec, generate_history
+    from repro.tuneapi import Budget
+
+    kb = KnowledgeBase()
+    kb.add_task(
+        generate_history(
+            TaskSpec("tpch", 100, "A").workload(), n_obs=12, n_init=5, seed=3
+        ),
+        persist=False,
+    )
+    wl = SparkWorkload("tpch", 100, "A")
+    res = MFTune(wl, kb, MFTuneOptions(seed=0, **opt_kw)).run(Budget(8 * 3600.0))
+    obs = kb.get(wl.task_id).observations
+    sig = [
+        (o.performance, o.fidelity, o.failed, tuple(sorted(o.config.items())))
+        for o in obs
+    ]
+    traj = [
+        (p.time, p.best, tuple(sorted(p.config.items()))) for p in res.trajectory
+    ]
+    return sig, traj, res
+
+
+def test_mftune_identical_across_hyperband_backends():
+    ref_sig, ref_traj, ref_res = _observations(hyperband_backend="loop")
+    got_sig, got_traj, got_res = _observations(hyperband_backend="table")
+    assert ref_res.n_evaluations > 10  # the tuning loop actually ran
+    assert ref_sig == got_sig
+    assert ref_traj == got_traj
+    assert ref_res.best_performance == got_res.best_performance
+    # promotion state is exposed without re-deriving it
+    assert ref_res.rung_tables == []
+    assert got_res.rung_tables and all(
+        isinstance(t, RungTable) for t in got_res.rung_tables
+    )
+    assert any(t.survivors for t in got_res.rung_tables)
