@@ -12,7 +12,7 @@ import time
 
 import numpy as np
 
-from .common import cached, load_kb, run_method
+from .common import cached, load_kb, run_method, stage_summary
 
 METHODS = ["mftune", "tuneful", "rover", "loftune", "locat", "toptune"]
 SEEDS = [0, 1, 2]
@@ -31,6 +31,7 @@ def run(force: bool = False):
             evals = {}
             for method in METHODS:
                 bests, nevals, walls = [], [], []
+                stages = ""
                 for seed in SEEDS:
                     kb = load_kb(exclude=[target])  # fresh copy per run
                     wl = SparkWorkload(bench, 600, "A")
@@ -38,6 +39,8 @@ def run(force: bool = False):
                     bests.append(res.best_performance)
                     nevals.append(res.n_evaluations)
                     walls.append(wall)
+                    if seed == SEEDS[0]:
+                        stages = stage_summary(res)
                 finals[method] = float(np.mean(bests))
                 evals[method] = float(np.mean(nevals))
                 rows.append({
@@ -45,7 +48,7 @@ def run(force: bool = False):
                     "us_per_call": float(np.mean(walls)) * 1e6,
                     "derived": (
                         f"best_latency_s={np.mean(bests):.0f} (+-{np.std(bests):.0f}) "
-                        f"n_evals={np.mean(nevals):.0f}"
+                        f"n_evals={np.mean(nevals):.0f} {stages}"
                     ),
                 })
             mf = finals["mftune"]

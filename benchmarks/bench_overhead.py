@@ -1,19 +1,116 @@
-"""§7.4.4: tuning overhead — real seconds per MFTune component.
+"""§7.4.4: tuning overhead — real seconds per MFTune component, plus the
+observability-plane overhead gate.
 
 Paper: ~15s similarity prediction; fidelity partitioning 21s (TPC-DS) /
 0.5s (TPC-H); per-iteration ~0.6s similarity + ~2s compression + ~0.2s BO;
 all negligible vs evaluation costs.
+
+This module also owns the tracer-overhead regression gate:
+
+    python -m benchmarks.bench_overhead --smoke
+
+runs the small warm-history TPC-H recipe with the tracer on and off
+(interleaved repetitions, min wall per arm), asserts tracer-on wall time
+is within 1% of tracer-off (+0.1s absolute slack for timer noise), and
+asserts the two runs produce **bit-identical** observation streams and
+trajectories — instrumentation must consume no RNG and alter no
+computation. Exit code 0 = gate passed; used by scripts/check.sh.
 """
 
 from __future__ import annotations
+
+import sys
+import time
 
 import numpy as np
 
 from .common import cached, load_kb, run_method
 
 BUDGET = 48 * 3600.0
+SMOKE_REPS = 3
+GATE_REL = 0.01     # tracer-on must be within 1% of tracer-off ...
+GATE_ABS_S = 0.1    # ... plus absolute slack for scheduler/timer noise
 
 
+# ------------------------------------------------------------------- smoke
+def _smoke_run(traced: bool):
+    """One warm-history tpch-100 run; returns (wall_s, obs_sig, traj_sig)."""
+    from repro import obs
+    from repro.core import MFTune, MFTuneOptions
+    from repro.core.knowledge import KnowledgeBase
+    from repro.sparksim import SparkWorkload, TaskSpec, generate_history
+    from repro.tuneapi import Budget
+
+    kb = KnowledgeBase()
+    kb.add_task(
+        generate_history(
+            TaskSpec("tpch", 100, "A").workload(), n_obs=12, n_init=5, seed=3
+        ),
+        persist=False,
+    )
+    wl = SparkWorkload("tpch", 100, "A")
+    tuner = MFTune(wl, kb, MFTuneOptions(seed=0))
+    budget = Budget(8 * 3600.0)
+    t0 = time.perf_counter()
+    if traced:
+        with obs.tracing(obs.Tracer("overhead-smoke")):
+            res = tuner.tune(budget)
+    else:
+        res = tuner.tune(budget)
+    wall = time.perf_counter() - t0
+    obs_sig = [
+        (o.performance, o.fidelity, tuple(sorted(o.config.items())))
+        for o in kb.get(wl.task_id).observations
+    ]
+    # wall_time is a real-clock stamp and legitimately differs between runs
+    traj_sig = [
+        (p.time, p.best, p.fidelity, p.rung, tuple(sorted(p.config.items())))
+        for p in res.trajectory
+    ]
+    return wall, obs_sig, traj_sig
+
+
+def _disabled_path_ns(n: int = 200_000) -> float:
+    """ns per obs.span() round-trip with no tracer installed."""
+    from repro import obs
+
+    assert obs.get_tracer() is None
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs.span("x", a=1):
+            pass
+        obs.count("c")
+    return 1e9 * (time.perf_counter() - t0) / n
+
+
+def smoke(reps: int = SMOKE_REPS, verbose: bool = True) -> int:
+    walls_on, walls_off = [], []
+    ref_on = ref_off = None
+    for _ in range(reps):  # interleave the arms so drift hits both equally
+        w_off, sig_off, traj_off = _smoke_run(traced=False)
+        w_on, sig_on, traj_on = _smoke_run(traced=True)
+        walls_off.append(w_off)
+        walls_on.append(w_on)
+        ref_off = ref_off or (sig_off, traj_off)
+        ref_on = ref_on or (sig_on, traj_on)
+
+    t_off, t_on = min(walls_off), min(walls_on)
+    rel = (t_on - t_off) / t_off if t_off > 0 else 0.0
+    identical = ref_on == ref_off
+    ns = _disabled_path_ns()
+
+    ok = identical and t_on <= t_off * (1.0 + GATE_REL) + GATE_ABS_S
+    if verbose:
+        print(f"tracer off : {t_off:.3f}s (min of {reps})")
+        print(f"tracer on  : {t_on:.3f}s (min of {reps})  overhead={100 * rel:+.2f}%")
+        print(f"disabled-path span+counter: {ns:.0f}ns/call")
+        print(f"trajectories bit-identical on vs off: {identical}")
+        print("overhead gate:", "OK" if ok else
+              f"FAIL (>{100 * GATE_REL:.0f}% + {GATE_ABS_S}s, or trajectory drift)")
+    return 0 if ok else 1
+
+
+# ------------------------------------------------------------- full bench
 def run(force: bool = False):
     def compute():
         from repro.sparksim import SparkWorkload, make_task_id
@@ -40,6 +137,38 @@ def run(force: bool = False):
                     f"(negligible={total_oh < 0.01 * BUDGET})"
                 ),
             })
+        # observability-plane overhead: tracer on vs off on the smoke recipe
+        w_off, _, traj_off = _smoke_run(traced=False)
+        w_on, _, traj_on = _smoke_run(traced=True)
+        rows.append({
+            "name": "overhead_tracer_smoke",
+            "us_per_call": 1e6 * max(w_on - w_off, 0.0),
+            "derived": (
+                f"tracer_on={w_on:.3f}s tracer_off={w_off:.3f}s "
+                f"rel={100 * (w_on - w_off) / max(w_off, 1e-9):+.2f}% "
+                f"identical_trajectory={traj_on == traj_off}"
+            ),
+        })
+        ns = _disabled_path_ns()
+        rows.append({
+            "name": "overhead_tracer_disabled_path",
+            "us_per_call": ns / 1e3,
+            "derived": f"span+counter round-trip with tracing disabled: {ns:.0f}ns/call",
+        })
         return rows
 
     return cached("overhead", force, compute)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the tracer-overhead regression gate and exit")
+    ap.add_argument("--reps", type=int, default=SMOKE_REPS)
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke(reps=args.reps))
+    for r in run(force=True):
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

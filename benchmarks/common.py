@@ -64,24 +64,54 @@ def load_kb(exclude: Optional[List[str]] = None, include_only: Optional[List[str
 
 def run_method(method: str, workload, kb, budget_s: float, seed: int,
                mftune_opts: Optional[dict] = None):
-    """Instantiate + run one tuner; returns (TuningResult, wall_s)."""
+    """Instantiate + run one tuner; returns (TuningResult, wall_s).
+
+    When ``REPRO_BENCH_TRACE_DIR`` is set (``benchmarks.run --trace``),
+    each run executes under a fresh Tracer and its Perfetto trace is
+    persisted to ``$REPRO_BENCH_TRACE_DIR/<method>_<task>_s<seed>.json``
+    alongside the results/bench/*.json rows. Off by default — tracing adds
+    no RNG draws, so traced and untraced runs are bit-identical anyway.
+    """
     from repro.baselines import LOCAT, LOFTune, Rover, Tuneful, TopTune, VanillaBO, RandomSearch
     from repro.core import MFTune, MFTuneOptions
     from repro.tuneapi import Budget
 
-    t0 = time.perf_counter()
-    budget = Budget(budget_s)
-    if method.startswith("mftune"):
-        opts = MFTuneOptions(seed=seed, **(mftune_opts or {}))
-        res = MFTune(workload, kb, opts).run(budget)
-    else:
+    def go():
+        budget = Budget(budget_s)
+        if method.startswith("mftune"):
+            opts = MFTuneOptions(seed=seed, **(mftune_opts or {}))
+            return MFTune(workload, kb, opts).run(budget)
         cls = {
             "locat": LOCAT, "toptune": TopTune, "tuneful": Tuneful,
             "rover": Rover, "loftune": LOFTune, "bo": VanillaBO,
             "random": RandomSearch,
         }[method]
-        res = cls(workload, kb, seed=seed).run(budget)
+        return cls(workload, kb, seed=seed).run(budget)
+
+    trace_dir = os.environ.get("REPRO_BENCH_TRACE_DIR")
+    t0 = time.perf_counter()
+    if trace_dir:
+        from repro import obs
+
+        tracer = obs.Tracer(f"{method}:{workload.task_id}:s{seed}")
+        with obs.tracing(tracer):
+            res = go()
+        wall = time.perf_counter() - t0
+        os.makedirs(trace_dir, exist_ok=True)
+        out = os.path.join(trace_dir, f"{method}_{workload.task_id}_s{seed}.json")
+        obs.export_perfetto(tracer, out)
+        return res, wall
+    res = go()
     return res, time.perf_counter() - t0
+
+
+def stage_summary(res, top: int = 3) -> str:
+    """Compact ``stage=secs`` list from a TuningResult's overheads view —
+    every method populates it through the shared tracing vocabulary."""
+    if not res.overheads:
+        return "stages=n/a"
+    items = sorted(res.overheads.items(), key=lambda kv: -kv[1])[:top]
+    return "stages[" + " ".join(f"{k}={v:.1f}s" for k, v in items) + "]"
 
 
 def traj_to_curve(res, budget_s: float, n_points: int = 49):

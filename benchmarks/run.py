@@ -37,7 +37,15 @@ def main() -> None:
     ap.add_argument("--force", action="store_true",
                     default=os.environ.get("REPRO_BENCH_FORCE") == "1")
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--trace", action="store_true",
+                    help="persist a Perfetto trace per tuning run under "
+                         "results/bench/traces/ (inspect with scripts/inspect_run.py)")
     args = ap.parse_args()
+
+    if args.trace:
+        from .common import CACHE
+
+        os.environ["REPRO_BENCH_TRACE_DIR"] = os.path.join(CACHE, "traces")
 
     import importlib
 

@@ -22,13 +22,23 @@ python -m pytest -x -q tests/test_shapley_batched.py
 echo "== rung-table == scalar-hyperband equivalence gate =="
 python -m pytest -x -q tests/test_rung_table.py
 
+echo "== observability gate (span invariants + tracer-on/off bit-identity) =="
+python -m pytest -x -q tests/test_obs.py
+
 echo "== hb-schedule bench smoke (promotion equivalence + allocation-growth guard) =="
 python -m benchmarks.bench_hb_schedule --smoke > /dev/null
+
+echo "== trace-schema validation (traced end-to-end run, every event checked) =="
+python -m repro.obs.selfcheck > /dev/null
+
+echo "== tracer overhead regression gate (on vs off < 1%, identical trajectories) =="
+python -m benchmarks.bench_overhead --smoke
 
 echo "== tier-1: pytest -x -q (rest of the fast suite) =="
 python -m pytest -x -q --ignore=tests/test_batch_eval.py --ignore=tests/test_surrogate_packed.py \
   --ignore=tests/test_space_plane.py --ignore=tests/test_tree_frontier.py \
-  --ignore=tests/test_shapley_batched.py --ignore=tests/test_rung_table.py
+  --ignore=tests/test_shapley_batched.py --ignore=tests/test_rung_table.py \
+  --ignore=tests/test_obs.py
 
 if [[ "${1:-}" == "--slow" ]]; then
   echo "== slow tier =="

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Live run inspector: summarize an exported tuner trace.
+
+    python scripts/inspect_run.py results/bench/traces/mftune_tpch.json
+    python scripts/inspect_run.py run.trace.jsonl --validate
+
+Accepts both exporter formats (JSONL event stream and Chrome/Perfetto
+trace_event JSON) — the format is auto-detected. Prints the stage time
+breakdown, cache hit rates, rung survival funnel, and budget attribution
+(low- vs full-fidelity virtual seconds). ``--validate`` additionally
+checks every event against repro/obs/trace_schema.json and exits nonzero
+on violations.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("trace", nargs="+", help="trace file(s): .jsonl or Perfetto .json")
+    ap.add_argument("--validate", action="store_true",
+                    help="validate every event against the trace schema")
+    args = ap.parse_args(argv)
+
+    from repro import obs
+
+    bad = 0
+    for path in args.trace:
+        if len(args.trace) > 1:
+            print(f"=== {path} ===")
+        try:
+            events = obs.read_events(path)
+        except Exception as e:
+            print(f"error: cannot read {path}: {type(e).__name__}: {e}")
+            bad += 1
+            continue
+        if args.validate:
+            violations = obs.validate_events(events)
+            if violations:
+                bad += 1
+                print(f"schema: {len(violations)} violation(s)")
+                for v in violations[:10]:
+                    print("  ", v)
+            else:
+                print(f"schema: all {len(events)} events valid")
+        print(obs.summarize(events))
+        if len(args.trace) > 1:
+            print()
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

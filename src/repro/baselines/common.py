@@ -8,11 +8,14 @@ MFTune's so end-to-end comparisons are apples-to-apples.
 
 from __future__ import annotations
 
+import time as _time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .. import obs as _obs
 from ..core.acquisition import ei_scores
 from ..core.knowledge import KnowledgeBase, Observation, TaskRecord
 from ..core.mftune import TrajectoryPoint, TuningResult
@@ -36,6 +39,22 @@ class BaselineTuner:
         self.space: ConfigSpace = workload.space
         self.obs: List[Observation] = []
         self._trajectory: List[TrajectoryPoint] = []
+        # same per-run registry shape as MFTune, so bench_end_to_end can
+        # report stage breakdowns for every method through one vocabulary
+        self.metrics = _obs.Metrics()
+
+    @contextmanager
+    def stage(self, key: str, **args):
+        """Span + ``overhead/<key>`` counter around one tuner stage — the
+        shared Tracer entry point every baseline proposal routes through."""
+        t0 = _time.perf_counter()
+        with _obs.span(key, tuner=self.name, **args) as sp:
+            try:
+                yield sp
+            finally:
+                self.metrics.counter("overhead/" + key).add(
+                    _time.perf_counter() - t0
+                )
 
     # ------------------------------------------------------------- accounting
     def _ok(self) -> List[Observation]:
@@ -60,36 +79,50 @@ class BaselineTuner:
             time=budget.now,
         )
         if query_indices is None:
+            m = self.metrics
+            m.counter("eval/failed" if o.failed else "eval/ok").add()
+            m.counter("budget/full_fidelity_s").add(res.elapsed)
+            m.histogram("eval/elapsed_s").observe(res.elapsed)
             self.obs.append(o)
             if not o.failed:
                 b = self.best()
                 if b is o:
                     self._trajectory.append(
-                        TrajectoryPoint(time=budget.now, best=o.performance, config=cfg, fidelity=1.0)
+                        TrajectoryPoint(time=budget.now, best=o.performance, config=cfg,
+                                        fidelity=1.0, wall_time=_time.time(), rung=None)
                     )
         return o
 
     # ---------------------------------------------------------------- running
     def initialize(self, budget: Budget) -> None:
         """Default: small LHS init."""
-        for cfg in self.space.lhs_sample(self.rng, 5):
-            if budget.exhausted:
-                return
-            self.evaluate_full(budget, cfg)
+        with _obs.span("cold_start", tuner=self.name):
+            for cfg in self.space.lhs_sample(self.rng, 5):
+                if budget.exhausted:
+                    return
+                self.evaluate_full(budget, cfg)
 
     def propose(self, budget: Budget) -> Optional[Config]:
         raise NotImplementedError
 
     def step(self, budget: Budget) -> None:
-        cfg = self.propose(budget)
+        with self.stage("bo_recommend", mode="baseline"):
+            cfg = self.propose(budget)
         if cfg is not None and not budget.exhausted:
             self.evaluate_full(budget, cfg)
 
     def run(self, budget: Budget) -> TuningResult:
         self.initialize(budget)
+        it = 0
         while not budget.exhausted:
-            self.step(budget)
+            with _obs.span("iteration", tuner=self.name, i=it, mode="full_fidelity"):
+                self.step(budget)
+            it += 1
         b = self.best()
+        m = self.metrics
+        tracer = _obs.get_tracer()
+        if tracer is not None:
+            tracer.emit_metrics(m, scope=f"{self.name}:{self.wl.task_id}")
         return TuningResult(
             best_config=b.config if b else None,
             best_performance=b.performance if b else float("inf"),
@@ -97,6 +130,8 @@ class BaselineTuner:
             n_evaluations=len(self.obs),
             n_full_evaluations=len(self.obs),
             mfo_activation_time=None,
+            overheads=m.counters_view("overhead/", coerce_int=False),
+            metrics=m.snapshot(),
         )
 
     # ------------------------------------------------------------------ utils
@@ -105,9 +140,10 @@ class BaselineTuner:
         space = space or self.space
         if len(obs) < 2:
             return None
-        X = space.encode_many([o.config for o in obs])
-        y = np.array([o.performance for o in obs])
-        return make_forest(seed=self.seed).fit(X, y)
+        with _obs.span("surrogate_fit", source=f"baseline:{self.name}", n_obs=len(obs)):
+            X = space.encode_many([o.config for o in obs])
+            y = np.array([o.performance for o in obs])
+            return make_forest(seed=self.seed).fit(X, y)
 
     def ei_pick(self, model, pool: Sequence[Config], space=None) -> Config:
         """Best-EI pick; a ConfigBatch pool is scored from its cached unit
@@ -115,7 +151,8 @@ class BaselineTuner:
         space = space or self.space
         ok = self._ok()
         best = min(o.performance for o in ok) if ok else 0.0
-        scores = ei_scores(model, space.encode_many(pool), best)
+        with _obs.span("acquisition", pool=len(pool), sources=1, k=1):
+            scores = ei_scores(model, space.encode_many(pool), best)
         return pool[int(np.argmax(scores))]
 
 

@@ -83,13 +83,14 @@ class LOCAT(BaselineTuner):
 
     # ------------------------------------------------------------------ loop
     def step(self, budget: Budget) -> None:
-        self._maybe_shrink_space()
-        self._maybe_compress_workload()
-        model = self.fit_surrogate(space=self.space)
-        # columnar: sample the shrunk space, lift into the full space with
-        # defaults, and score without materializing dicts
-        pool = self.space.complete_batch(self.active_space.sample(self.rng, 192))
-        cfg = self.ei_pick(model, pool) if model is not None else pool[0]
+        with self.stage("bo_recommend", mode="baseline"):
+            self._maybe_shrink_space()
+            self._maybe_compress_workload()
+            model = self.fit_surrogate(space=self.space)
+            # columnar: sample the shrunk space, lift into the full space with
+            # defaults, and score without materializing dicts
+            pool = self.space.complete_batch(self.active_space.sample(self.rng, 192))
+            cfg = self.ei_pick(model, pool) if model is not None else pool[0]
         if self.query_subset is None:
             self.evaluate_full(budget, cfg)
             return

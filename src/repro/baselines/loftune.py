@@ -17,6 +17,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from .. import obs as _obs
 from ..core.knowledge import KnowledgeBase
 from ..core.surrogate import ProbabilisticRandomForest, make_forest
 from .common import BaselineTuner, Budget, Config
@@ -66,6 +67,10 @@ class LOFTune(BaselineTuner):
 
     # ------------------------------------------------------------------ warm
     def initialize(self, budget: Budget) -> None:
+        with _obs.span("warm_start", tuner=self.name):
+            self._initialize(budget)
+
+    def _initialize(self, budget: Budget) -> None:
         sources = [t for t in self.kb.source_tasks(self.wl.task_id) if t.meta_features is not None]
         if self._target_meta is not None and sources:
             sources.sort(key=lambda t: self._meta_distance(self._target_meta, t.meta_features))

@@ -14,6 +14,7 @@ from typing import Optional
 
 import numpy as np
 
+from .. import obs as _obs
 from ..core.acquisition import aggregate_ranks, score_sources
 from ..core.knowledge import KnowledgeBase
 from ..core.similarity import SimilarityEngine
@@ -39,6 +40,10 @@ class Rover(BaselineTuner):
         self._seeded = False
 
     def initialize(self, budget: Budget) -> None:
+        with _obs.span("warm_start", tuner=self.name):
+            self._initialize(budget)
+
+    def _initialize(self, budget: Budget) -> None:
         # seed with the best config of the most similar source, then LHS
         weights = self.sim.compute(self.target)
         best_tid = None

@@ -90,7 +90,8 @@ class TopTune(BaselineTuner):
         return self._lift(z)
 
     def step(self, budget: Budget) -> None:
-        cfg = self.propose(budget)
+        with self.stage("bo_recommend", mode="baseline"):
+            cfg = self.propose(budget)
         if cfg is None or budget.exhausted:
             return
         o = self.evaluate_full(budget, cfg)

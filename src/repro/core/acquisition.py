@@ -28,6 +28,7 @@ from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from .surrogate import ForestPlane, ProbabilisticRandomForest, Surrogate
 
 __all__ = [
@@ -370,8 +371,9 @@ def score_sources(
     models: Sequence[Surrogate], X: np.ndarray, incumbents: Sequence[float]
 ) -> np.ndarray:
     """Fused acquisition: EI of every source on every candidate, shape (S, N)."""
-    means, vars_ = predict_sources(models, X)
-    return ei_matrix(means, vars_, np.asarray(incumbents, dtype=float))
+    with obs.span("surrogate_eval", pool=int(X.shape[0]), sources=len(models)):
+        means, vars_ = predict_sources(models, X)
+        return ei_matrix(means, vars_, np.asarray(incumbents, dtype=float))
 
 
 def aggregate_ranks(scores: np.ndarray, weights: Sequence[float]) -> np.ndarray:

@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs as _obs
 from .kde import WeightedKDE, alpha_mass_categories, alpha_mass_region
 from .knowledge import TaskRecord
 from .shapley import shapley_values_batch
@@ -99,10 +100,12 @@ def extract_promising_regions(
     region = PromisingRegion(task_id=task.task_id, weight=task_weight, n_good=len(good))
     rng = np.random.default_rng(perm_seed)
     X_good = space.encode_many([o.config for o in good])  # one columnar pass
-    phis = shapley_values_batch(
-        f, X_good, background, n_permutations=n_permutations, rng=rng,
-        backend=backend, model=model,
-    )
+    with _obs.span("shapley_attribution", task=task.task_id,
+                   n_configs=len(good), perms=n_permutations, backend=backend):
+        phis = shapley_values_batch(
+            f, X_good, background, n_permutations=n_permutations, rng=rng,
+            backend=backend, model=model,
+        )
     # Eq. 3 keeps values with negative SHAP. We additionally require the
     # attribution to clear a noise floor (5% of the config's largest
     # |phi|): irrelevant knobs fluctuate around +-eps and would otherwise
@@ -174,6 +177,7 @@ def compress_space(
             key = (knob.name, float(alpha), tuple(vals), tuple(wts))
             hit = range_cache.get(key)
             if hit is not None:
+                _obs.count("kde_cache/hits")
                 range_cache.move_to_end(key)
                 kind, payload = hit
                 if kind == "range":
@@ -181,6 +185,7 @@ def compress_space(
                 elif kind == "cats":
                     cat_subsets[knob.name] = payload
                 continue  # "skip" payloads re-derive nothing
+            _obs.count("kde_cache/misses")
 
         if isinstance(knob, (FloatKnob, IntKnob)):
             xs = np.asarray(vals, dtype=float)
@@ -234,6 +239,11 @@ class SpaceCompressor:
         self._range_cache: "OrderedDict" = OrderedDict()
 
     def _region(self, task: TaskRecord, weight: float, refresh: bool = False) -> Optional[PromisingRegion]:
+        _obs.count(
+            "region_cache/misses"
+            if refresh or task.task_id not in self._cache
+            else "region_cache/hits"
+        )
         if refresh or task.task_id not in self._cache:
             # drop any stale entry *before* recomputing: if the recompute
             # returns None (e.g. the target briefly falls below 4 full-

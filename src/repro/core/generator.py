@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs as _obs
 from .acquisition import (
     aggregate_ranks,
     get_acquisition_backend,
@@ -242,12 +243,16 @@ class CandidateGenerator:
             if tid == "__target__" or w <= 0 or tid not in tasks:
                 continue
 
-            def build_task(task=tasks[tid]):
-                m = surrogate_for_task(self.space, task, seed=self.seed, backend=self.backend)
-                if m is None:
-                    return None
-                obs = task.full_fidelity()
-                return m, (min(o.performance for o in obs) if obs else 0.0)
+            def build_task(task=tasks[tid], tid=tid):
+                with _obs.span("surrogate_fit", source=f"task:{tid}",
+                               n_obs=len(task.observations)):
+                    m = surrogate_for_task(
+                        self.space, task, seed=self.seed, backend=self.backend
+                    )
+                    if m is None:
+                        return None
+                    obs = task.full_fidelity()
+                    return m, (min(o.performance for o in obs) if obs else 0.0)
 
             got = self._store.get(f"task:{tid}", len(tasks[tid].observations), build_task)
             if got is None:
@@ -265,19 +270,21 @@ class CandidateGenerator:
             if len(ok_obs) < 2:
                 continue
 
-            def build_fid(all_obs=all_obs, ok_obs=ok_obs):
+            def build_fid(all_obs=all_obs, ok_obs=ok_obs, d=d):
                 # failed evaluations (OOM / early-stop) enter the fit at a
                 # crash-cost penalty instead of being hidden: with log-space
                 # sampling a large pool fraction can sit in the failure
                 # region, and a surrogate that never sees failures keeps
                 # recommending into it (SMAC-style imputation)
-                penalty = 2.0 * max(o.performance for o in ok_obs)
-                X = self.space.encode_many([o.config for o in all_obs])
-                y = np.array(
-                    [penalty if o.failed else o.performance for o in all_obs]
-                )
-                m = make_forest(seed=self.seed, backend=self.backend).fit(X, y)
-                return m, float(min(o.performance for o in ok_obs))
+                with _obs.span("surrogate_fit", source=f"fid:{d:.3f}",
+                               n_obs=len(all_obs)):
+                    penalty = 2.0 * max(o.performance for o in ok_obs)
+                    X = self.space.encode_many([o.config for o in all_obs])
+                    y = np.array(
+                        [penalty if o.failed else o.performance for o in all_obs]
+                    )
+                    m = make_forest(seed=self.seed, backend=self.backend).fit(X, y)
+                    return m, float(min(o.performance for o in ok_obs))
 
             got = self._store.get(f"fid:{d:.6f}:{target.task_id}", len(all_obs), build_fid)
             if got is None:
@@ -306,14 +313,16 @@ class CandidateGenerator:
         """
         ss = self.sample_space
         n_mut = min(self.pool_size // 4, 16 * max(len(incumbents), 1))
-        pool = ss.sample(self._rng, self.pool_size - n_mut if incumbents else self.pool_size)
-        if incumbents:
-            bases = ConfigBatch.from_configs(
-                ss, [incumbents[i % len(incumbents)] for i in range(n_mut)]
-            )
-            muts = ss.mutate_many(ss.project_many(bases), self._rng)
-            pool = ConfigBatch.concat([pool, muts])
-        return self.space.complete_batch(pool)
+        with _obs.span("pool_gen", pool_size=self.pool_size,
+                       mutations=n_mut if incumbents else 0):
+            pool = ss.sample(self._rng, self.pool_size - n_mut if incumbents else self.pool_size)
+            if incumbents:
+                bases = ConfigBatch.from_configs(
+                    ss, [incumbents[i % len(incumbents)] for i in range(n_mut)]
+                )
+                muts = ss.mutate_many(ss.project_many(bases), self._rng)
+                pool = ConfigBatch.concat([pool, muts])
+            return self.space.complete_batch(pool)
 
     def _config_keys(self, cfgs: Sequence[Config]) -> List[bytes]:
         """Canonical row keys for config dicts, cached per dict identity."""
@@ -397,11 +406,12 @@ class CandidateGenerator:
         if not active:
             order = self._rng.permutation(len(pool))
             return pool.take(order[:n])
-        X = pool.unit()
-        scores = score_sources([s.model for s in active], X, [s.incumbent for s in active])
-        agg = aggregate_ranks(scores, [s.weight for s in active])
-        order = np.argsort(agg, kind="stable")
-        return pool.take(order[:n])
+        with _obs.span("acquisition", pool=len(pool), sources=len(active), k=n):
+            X = pool.unit()
+            scores = score_sources([s.model for s in active], X, [s.incumbent for s in active])
+            agg = aggregate_ranks(scores, [s.weight for s in active])
+            order = np.argsort(agg, kind="stable")
+            return pool.take(order[:n])
 
     # -------------------------------------------------------- fused propose
     @property

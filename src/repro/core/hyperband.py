@@ -46,6 +46,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
+
 __all__ = [
     "hb_schedule",
     "sh_schedule",
@@ -228,6 +230,7 @@ class RungTable:
         "failed",
         "elapsed",
         "rung_id",
+        "trace_id",
         "_n",
     )
 
@@ -244,6 +247,7 @@ class RungTable:
         self.failed = np.empty(cap, dtype=bool)
         self.elapsed = np.empty(cap, dtype=np.float64)
         self.rung_id = np.empty(cap, dtype=np.int32)
+        self.trace_id = np.empty(cap, dtype=np.int64)  # rung_eval span id (-1 = untraced)
         self._n = 0
 
     def __len__(self) -> int:
@@ -264,13 +268,14 @@ class RungTable:
         cap = self.capacity
         while cap < need:
             cap *= 2
-        for name in ("config_idx", "score", "failed", "elapsed", "rung_id"):
+        for name in ("config_idx", "score", "failed", "elapsed", "rung_id", "trace_id"):
             old = getattr(self, name)
             grown = np.empty(cap, dtype=old.dtype)
             grown[: self._n] = old[: self._n]
             setattr(self, name, grown)
 
-    def record(self, rung_i: int, config_idx, score, failed, elapsed) -> None:
+    def record(self, rung_i: int, config_idx, score, failed, elapsed,
+               trace_id: int = -1) -> None:
         """Append one rung's evaluation results as columns.
 
         Non-finite scores on successful rows are rejected: a NaN (or inf)
@@ -297,6 +302,7 @@ class RungTable:
         self.failed[n0:n1] = fl
         self.elapsed[n0:n1] = el
         self.rung_id[n0:n1] = rung_i
+        self.trace_id[n0:n1] = trace_id
         self._n = n1
 
     def rows(self, rung_i: int) -> np.ndarray:
@@ -446,37 +452,46 @@ class HyperbandRunner:
         for rung_i, rung in enumerate(rungs):
             if should_stop():
                 break
-            results: List[EvalOutcome] = []
-            if evaluate_batch is not None:
-                batch = survivors[: rung.n]
-                cap = self._cost_cap(rung.delta)
-                for cfg, (perf, failed, elapsed) in zip(
-                    batch, evaluate_batch(batch, rung.delta, cap)
-                ):
-                    self._record_cost(rung.delta, elapsed)
-                    on_result(cfg, rung.delta, perf, failed, elapsed)
-                    results.append(EvalOutcome(cfg, perf, failed, elapsed))
-            else:
-                for cfg in survivors[: rung.n]:
-                    if should_stop():
-                        break
+            with obs.span(
+                "rung_eval", s=bracket.s, rung=rung_i, delta=rung.delta,
+                n=min(rung.n, len(survivors)),
+            ) as sp:
+                results: List[EvalOutcome] = []
+                if evaluate_batch is not None:
+                    batch = survivors[: rung.n]
                     cap = self._cost_cap(rung.delta)
-                    perf, failed, elapsed = evaluate(cfg, rung.delta, cap)
-                    self._record_cost(rung.delta, elapsed)
-                    on_result(cfg, rung.delta, perf, failed, elapsed)
-                    results.append(EvalOutcome(cfg, perf, failed, elapsed))
-            ok = [r for r in results if not r.failed]
-            ok.sort(key=lambda r: r.performance)
-            if rung_i + 1 < len(rungs):
-                # promotion quota over *successful* evaluations: counting
-                # failed rows (the old len(results)) promoted more than the
-                # top n_i/eta of the configs that actually have a score
-                keep = max(len(ok) // self.eta, 1)
-                survivors = [r.config for r in ok[:keep]]
-                if not survivors:
-                    break
-            else:
-                outcomes = results
+                    for cfg, (perf, failed, elapsed) in zip(
+                        batch, evaluate_batch(batch, rung.delta, cap)
+                    ):
+                        self._record_cost(rung.delta, elapsed)
+                        on_result(cfg, rung.delta, perf, failed, elapsed)
+                        results.append(EvalOutcome(cfg, perf, failed, elapsed))
+                else:
+                    for cfg in survivors[: rung.n]:
+                        if should_stop():
+                            break
+                        cap = self._cost_cap(rung.delta)
+                        perf, failed, elapsed = evaluate(cfg, rung.delta, cap)
+                        self._record_cost(rung.delta, elapsed)
+                        on_result(cfg, rung.delta, perf, failed, elapsed)
+                        results.append(EvalOutcome(cfg, perf, failed, elapsed))
+                ok = [r for r in results if not r.failed]
+                ok.sort(key=lambda r: r.performance)
+                sp.set(
+                    evaluated=len(results), ok=len(ok),
+                    cost=float(sum(r.elapsed for r in results)),
+                )
+                if rung_i + 1 < len(rungs):
+                    # promotion quota over *successful* evaluations: counting
+                    # failed rows (the old len(results)) promoted more than the
+                    # top n_i/eta of the configs that actually have a score
+                    keep = max(len(ok) // self.eta, 1)
+                    survivors = [r.config for r in ok[:keep]]
+                    sp.set(survivors=len(survivors))
+                    if not survivors:
+                        break
+                else:
+                    outcomes = results
         return outcomes
 
     # ----------------------------------------------------- array-native table
@@ -493,44 +508,52 @@ class HyperbandRunner:
             if should_stop():
                 break
             idxs = survivors[: rung.n]
-            if evaluate_batch is not None:
-                batch = [configs[int(i)] for i in idxs]
-                cap = self._cost_cap(rung.delta)
-                res = evaluate_batch(batch, rung.delta, cap)
-                idxs = idxs[: len(res)]  # budget may truncate to a prefix
-                perf = np.fromiter((r[0] for r in res), dtype=np.float64, count=len(res))
-                fail = np.fromiter((r[1] for r in res), dtype=bool, count=len(res))
-                elap = np.fromiter((r[2] for r in res), dtype=np.float64, count=len(res))
-                if isinstance(self._cost_history, CostColumns):
-                    self._cost_history.extend(round(rung.delta, 6), elap)
-                else:
-                    for e in elap:
-                        self._record_cost(rung.delta, float(e))
-                for i, (p, f, e) in zip(idxs, res):
-                    on_result(configs[int(i)], rung.delta, p, f, e)
-            else:
-                done, perf_l, fail_l, elap_l = 0, [], [], []
-                for i in idxs:
-                    if should_stop():
-                        break
-                    cfg = configs[int(i)]
+            with obs.span(
+                "rung_eval", s=bracket.s, rung=rung_i, delta=rung.delta, n=len(idxs)
+            ) as sp:
+                if evaluate_batch is not None:
+                    batch = [configs[int(i)] for i in idxs]
                     cap = self._cost_cap(rung.delta)
-                    p, f, e = evaluate(cfg, rung.delta, cap)
-                    self._record_cost(rung.delta, e)
-                    on_result(cfg, rung.delta, p, f, e)
-                    perf_l.append(p)
-                    fail_l.append(f)
-                    elap_l.append(e)
-                    done += 1
-                idxs = idxs[:done]
-                perf = np.asarray(perf_l, dtype=np.float64)
-                fail = np.asarray(fail_l, dtype=bool)
-                elap = np.asarray(elap_l, dtype=np.float64)
-            table.record(rung_i, idxs, perf, fail, elap)
-            if rung_i + 1 < len(rungs):
-                survivors = table.promote(rung_i, self.eta)
-                if survivors.size == 0:
-                    break
-            else:
-                outcomes = table.rung_outcomes(rung_i)
+                    res = evaluate_batch(batch, rung.delta, cap)
+                    idxs = idxs[: len(res)]  # budget may truncate to a prefix
+                    perf = np.fromiter((r[0] for r in res), dtype=np.float64, count=len(res))
+                    fail = np.fromiter((r[1] for r in res), dtype=bool, count=len(res))
+                    elap = np.fromiter((r[2] for r in res), dtype=np.float64, count=len(res))
+                    if isinstance(self._cost_history, CostColumns):
+                        self._cost_history.extend(round(rung.delta, 6), elap)
+                    else:
+                        for e in elap:
+                            self._record_cost(rung.delta, float(e))
+                    for i, (p, f, e) in zip(idxs, res):
+                        on_result(configs[int(i)], rung.delta, p, f, e)
+                else:
+                    done, perf_l, fail_l, elap_l = 0, [], [], []
+                    for i in idxs:
+                        if should_stop():
+                            break
+                        cfg = configs[int(i)]
+                        cap = self._cost_cap(rung.delta)
+                        p, f, e = evaluate(cfg, rung.delta, cap)
+                        self._record_cost(rung.delta, e)
+                        on_result(cfg, rung.delta, p, f, e)
+                        perf_l.append(p)
+                        fail_l.append(f)
+                        elap_l.append(e)
+                        done += 1
+                    idxs = idxs[:done]
+                    perf = np.asarray(perf_l, dtype=np.float64)
+                    fail = np.asarray(fail_l, dtype=bool)
+                    elap = np.asarray(elap_l, dtype=np.float64)
+                table.record(rung_i, idxs, perf, fail, elap, trace_id=sp.id)
+                sp.set(
+                    evaluated=len(idxs), ok=int(len(idxs) - np.count_nonzero(fail)),
+                    cost=float(elap.sum()),
+                )
+                if rung_i + 1 < len(rungs):
+                    survivors = table.promote(rung_i, self.eta)
+                    sp.set(survivors=int(survivors.size))
+                    if survivors.size == 0:
+                        break
+                else:
+                    outcomes = table.rung_outcomes(rung_i)
         return outcomes

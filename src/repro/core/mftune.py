@@ -29,6 +29,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..tuneapi import Budget, EvalResult, Workload
 from .compression import SpaceCompressor
 from .fidelity import (
@@ -91,10 +92,13 @@ class MFTuneOptions:
 
 @dataclass
 class TrajectoryPoint:
-    time: float
+    time: float                      # virtual budget seconds at improvement
     best: float
     config: Config
     fidelity: float
+    wall_time: float = 0.0           # time.time() at improvement (0.0 = unset)
+    rung: Optional[int] = None       # fidelity-level index into the bracket's
+                                     # delta ladder (top level for full-fid BO)
 
 
 @dataclass
@@ -110,6 +114,8 @@ class TuningResult:
     plane_cache: Dict[str, int] = field(default_factory=dict)      # fused-plane LRU counters
     rung_tables: List["RungTable"] = field(default_factory=list)   # per-bracket promotion
                                                                    # state (table backend)
+    metrics: Dict[str, Any] = field(default_factory=dict)          # full registry snapshot
+                                                                   # (obs.Metrics.snapshot())
 
 
 class MFTune:
@@ -154,12 +160,15 @@ class MFTune:
         self._trajectory: List[TrajectoryPoint] = []
         self._n_eval = 0
         self._n_full = 0
-        self._overheads: Dict[str, float] = {}
+        # per-run metrics registry: the single sink that TuningResult's
+        # overheads / surrogate_cache / plane_cache fields are views over
+        self.metrics = obs.Metrics()
         self._deltas = [r.delta for r in self.hb.brackets[0].rungs]  # e.g. [1/9, 1/3, 1]
+        self._delta_rung = {round(d, 6): i for i, d in enumerate(self._deltas)}
 
     # ------------------------------------------------------------------ utils
     def _charge_overhead(self, key: str, t0: float) -> None:
-        self._overheads[key] = self._overheads.get(key, 0.0) + (_time.perf_counter() - t0)
+        self.metrics.counter("overhead/" + key).add(_time.perf_counter() - t0)
 
     def _best(self) -> Tuple[Optional[Config], float]:
         best = self.target.best()
@@ -205,7 +214,7 @@ class MFTune:
         # best-so-far *before* this observation enters the KB: the trajectory
         # gains a point only on strict improvement (ties used to duplicate)
         _, prev_best = self._best()
-        obs = Observation(
+        ob = Observation(
             config=config,
             performance=perf,
             fidelity=delta,
@@ -216,12 +225,23 @@ class MFTune:
             elapsed=res.elapsed,
             time=budget.now,
         )
-        self.kb.record(self.target.task_id, obs)
+        self.kb.record(self.target.task_id, ob)
+        m = self.metrics
+        m.counter("eval/failed" if failed else "eval/ok").add()
+        m.counter(
+            "budget/full_fidelity_s" if delta >= 1.0 else "budget/low_fidelity_s"
+        ).add(res.elapsed)
+        m.counter(f"budget/fidelity@{delta:.3f}_s").add(res.elapsed)
+        m.histogram("eval/elapsed_s").observe(res.elapsed)
         if delta >= 1.0:
             self._n_full += 1
             if not failed and perf < prev_best:
                 self._trajectory.append(
-                    TrajectoryPoint(time=budget.now, best=perf, config=config, fidelity=1.0)
+                    TrajectoryPoint(
+                        time=budget.now, best=perf, config=config, fidelity=1.0,
+                        wall_time=_time.time(),
+                        rung=self._delta_rung.get(round(delta, 6)),
+                    )
                 )
         return perf, failed, res.elapsed
 
@@ -231,10 +251,13 @@ class MFTune:
         """Evaluate config at fidelity delta; record observation; charge budget."""
         config = dict(self.space.default(), **config)
         subset, data_fraction = self._fidelity_params(delta)
-        res = self.wl.evaluate(
-            config, query_indices=subset, cost_cap=cost_cap, data_fraction=data_fraction
-        )
-        return self._record(budget, config, delta, subset, res)
+        with obs.span("evaluate", delta=delta, n=1, cap=cost_cap) as sp:
+            res = self.wl.evaluate(
+                config, query_indices=subset, cost_cap=cost_cap, data_fraction=data_fraction
+            )
+            out = self._record(budget, config, delta, subset, res)
+            sp.set(cost=out[2], failed=out[1])
+        return out
 
     def _evaluate_many(
         self, budget: Budget, configs: List[Config], delta: float, cost_cap: Optional[float]
@@ -248,27 +271,32 @@ class MFTune:
         """
         configs = [dict(self.space.default(), **c) for c in configs]
         subset, data_fraction = self._fidelity_params(delta)
-        results = self.wl.evaluate_many(
-            configs, query_indices=subset, cost_cap=cost_cap, data_fraction=data_fraction
-        )
-        out: List[Tuple[float, bool, float]] = []
-        for config, res in zip(configs, results):
-            if budget.exhausted:
-                break
-            out.append(self._record(budget, config, delta, subset, res))
+        with obs.span("evaluate", delta=delta, n=len(configs), cap=cost_cap) as sp:
+            results = self.wl.evaluate_many(
+                configs, query_indices=subset, cost_cap=cost_cap, data_fraction=data_fraction
+            )
+            out: List[Tuple[float, bool, float]] = []
+            for config, res in zip(configs, results):
+                if budget.exhausted:
+                    break
+                out.append(self._record(budget, config, delta, subset, res))
+            sp.set(recorded=len(out),
+                   cost=float(sum(r[2] for r in out)),
+                   failures=int(sum(1 for r in out if r[1])))
         return out
 
     # ----------------------------------------------------------- components
     def _weights(self) -> TaskWeights:
         t0 = _time.perf_counter()
-        if not self.opt.enable_transfer:
-            w = TaskWeights(weights={}, similarities={}, used_meta=False)
-            tgt = self.sim.target_self_weight(self.target)
-            if tgt > 0:
-                w.weights["__target__"] = 1.0
-            self._charge_overhead("similarity", t0)
-            return w
-        w = self.sim.compute(self.target)
+        with obs.span("similarity") as sp:
+            if not self.opt.enable_transfer:
+                w = TaskWeights(weights={}, similarities={}, used_meta=False)
+                tgt = self.sim.target_self_weight(self.target)
+                if tgt > 0:
+                    w.weights["__target__"] = 1.0
+            else:
+                w = self.sim.compute(self.target)
+            sp.set(sources=len(w.weights), used_meta=w.used_meta)
         self._charge_overhead("similarity", t0)
         return w
 
@@ -276,15 +304,17 @@ class MFTune:
         if not self.opt.enable_sc:
             return
         t0 = _time.perf_counter()
-        tasks = {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
-        if self.opt.compressor is not None:
-            compressed = self.opt.compressor(
-                space=self.space, weights=weights, tasks=tasks, target=self.target
-            )
-        else:
-            compressed = self.compressor.compress(weights, tasks, target=self.target)
-        if len(compressed) > 0:
-            self.gen.set_sample_space(compressed)
+        with obs.span("space_compression") as sp:
+            tasks = {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
+            if self.opt.compressor is not None:
+                compressed = self.opt.compressor(
+                    space=self.space, weights=weights, tasks=tasks, target=self.target
+                )
+            else:
+                compressed = self.compressor.compress(weights, tasks, target=self.target)
+            if len(compressed) > 0:
+                self.gen.set_sample_space(compressed)
+            sp.set(knobs=len(compressed))
         self._charge_overhead("space_compression", t0)
 
     def _try_partition(self, weights: TaskWeights) -> None:
@@ -292,24 +322,26 @@ class MFTune:
         if self.partition is not None or self.opt.fidelity_mode != "sql_selection":
             return
         t0 = _time.perf_counter()
-        sources = self.kb.same_query_sources(self.target) if self.opt.enable_transfer else []
-        stats = collect_query_stats(sources, weights.weights)
-        # degradation (§6.3): the current task becomes its own source once
-        # enough of its observations carry query vectors AND its own
-        # surrogate has established out-of-sample rank fidelity (positive
-        # k-fold tau -> a "__target__" weight). The former gate on the
-        # meta/Eq.2 transition deadlocked when history existed but stayed
-        # dissimilar: used_meta never flipped, so self-partition never fired.
-        if not stats:
-            full = self.target.with_query_vectors()
-            if (
-                len(full) >= self.opt.min_target_obs_for_partition
-                and weights.weights.get("__target__", 0.0) > 0
-            ):
-                stats = collect_query_stats([self.target], {self.target.task_id: 1.0})
-        if stats:
-            deltas = [d for d in self._deltas if d < 1.0]
-            self.partition = partition_fidelities(stats, deltas)
+        with obs.span("fidelity_partition") as sp:
+            sources = self.kb.same_query_sources(self.target) if self.opt.enable_transfer else []
+            stats = collect_query_stats(sources, weights.weights)
+            # degradation (§6.3): the current task becomes its own source once
+            # enough of its observations carry query vectors AND its own
+            # surrogate has established out-of-sample rank fidelity (positive
+            # k-fold tau -> a "__target__" weight). The former gate on the
+            # meta/Eq.2 transition deadlocked when history existed but stayed
+            # dissimilar: used_meta never flipped, so self-partition never fired.
+            if not stats:
+                full = self.target.with_query_vectors()
+                if (
+                    len(full) >= self.opt.min_target_obs_for_partition
+                    and weights.weights.get("__target__", 0.0) > 0
+                ):
+                    stats = collect_query_stats([self.target], {self.target.task_id: 1.0})
+            if stats:
+                deltas = [d for d in self._deltas if d < 1.0]
+                self.partition = partition_fidelities(stats, deltas)
+            sp.set(partitioned=self.partition is not None)
         self._charge_overhead("fidelity_partition", t0)
 
     def _mfo_ready(self) -> bool:
@@ -334,18 +366,23 @@ class MFTune:
                 stack.enter_context(acquisition_pool(self.opt.acquisition_pool))
             return self._run(budget)
 
+    # service-facing name for the same entry point
+    tune = run
+
     def _run(self, budget: Budget) -> TuningResult:
         from .acquisition import plane_cache_stats
 
         opt = self.opt
         plane0 = plane_cache_stats()
         # ---------------- Phase 1 warm start (once, full fidelity)
-        weights = self._weights()
-        if opt.enable_warmstart_p1 and opt.enable_transfer:
-            tasks = {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
-            cfg1 = phase1_config(weights, tasks)
-            if cfg1 is not None and not budget.exhausted:
-                self._evaluate(budget, cfg1, 1.0, None)
+        with obs.span("warm_start") as sp:
+            weights = self._weights()
+            if opt.enable_warmstart_p1 and opt.enable_transfer:
+                tasks = {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
+                cfg1 = phase1_config(weights, tasks)
+                if cfg1 is not None and not budget.exhausted:
+                    self._evaluate(budget, cfg1, 1.0, None)
+                    sp.set(phase1=True)
 
         # ---------------- cold-start init if nothing else to go on
         if not weights.weights and not self.target.full_fidelity():
@@ -354,36 +391,53 @@ class MFTune:
             # early-stop cap for the LHS probes — without it, exploratory
             # draws (log-geometry sampling reaches deep into the low-memory
             # OOM region on large inputs) each burn 4x-timeout charges
-            cap = None
-            if not budget.exhausted:
-                _, d_failed, d_cost = self._evaluate(
-                    budget, dict(self.wl.default_config()), 1.0, None
-                )
-                if not d_failed:
-                    cap = opt.early_stop_factor * d_cost
-            for cfg in self.space.lhs_sample(self.rng, opt.init_lhs):
-                if budget.exhausted:
-                    break
-                self._evaluate(budget, cfg, 1.0, cap)
+            with obs.span("cold_start", init_lhs=opt.init_lhs):
+                cap = None
+                if not budget.exhausted:
+                    _, d_failed, d_cost = self._evaluate(
+                        budget, dict(self.wl.default_config()), 1.0, None
+                    )
+                    if not d_failed:
+                        cap = opt.early_stop_factor * d_cost
+                for cfg in self.space.lhs_sample(self.rng, opt.init_lhs):
+                    if budget.exhausted:
+                        break
+                    self._evaluate(budget, cfg, 1.0, cap)
             weights = self._weights()
 
         # ---------------- iterative tuning
         it = 0
         while not budget.exhausted:
             it += 1
-            weights = self._weights()
-            if it % max(opt.sc_refresh_every, 1) == 0:
-                self._compress(weights)
-            self._try_partition(weights)
+            with obs.span("iteration", i=it) as sp:
+                weights = self._weights()
+                if it % max(opt.sc_refresh_every, 1) == 0:
+                    self._compress(weights)
+                self._try_partition(weights)
 
-            if self._mfo_ready():
-                if self._mfo_activation_time is None:
-                    self._mfo_activation_time = budget.now
-                self._run_mfo_bracket(budget, weights)
-            else:
-                self._run_bo_step(budget, weights)
+                if self._mfo_ready():
+                    if self._mfo_activation_time is None:
+                        self._mfo_activation_time = budget.now
+                    sp.set(mode="mfo")
+                    self._run_mfo_bracket(budget, weights)
+                else:
+                    sp.set(mode="bo")
+                    self._run_bo_step(budget, weights)
 
         best_cfg, best_perf = self._best()
+        # absorb the remaining side channels into the registry, then expose
+        # the legacy TuningResult fields as views over it
+        m = self.metrics
+        m.absorb_counters("surrogate_store/", self.gen.cache_stats)
+        plane_now = plane_cache_stats()
+        m.absorb_counters("plane_cache/", {
+            **{k: plane_now[k] - plane0[k] for k in ("hits", "misses", "evictions")},
+            "entries": plane_now["entries"],
+            "max_entries": plane_now["max_entries"],
+        })
+        tracer = obs.get_tracer()
+        if tracer is not None:
+            tracer.emit_metrics(m, scope=self.target.task_id)
         return TuningResult(
             best_config=best_cfg,
             best_performance=best_perf,
@@ -391,17 +445,11 @@ class MFTune:
             n_evaluations=self._n_eval,
             n_full_evaluations=self._n_full,
             mfo_activation_time=self._mfo_activation_time,
-            overheads=dict(self._overheads),
-            surrogate_cache=self.gen.cache_stats,
+            overheads=m.counters_view("overhead/", coerce_int=False),
+            surrogate_cache=m.counters_view("surrogate_store/"),
             rung_tables=list(self.hb.tables),
-            plane_cache={
-                **{
-                    k: plane_cache_stats()[k] - plane0[k]
-                    for k in ("hits", "misses", "evictions")
-                },
-                "entries": plane_cache_stats()["entries"],
-                "max_entries": plane_cache_stats()["max_entries"],
-            },
+            plane_cache=m.counters_view("plane_cache/"),
+            metrics=m.snapshot(),
         )
 
     # --------------------------------------------------------------- BO step
@@ -415,12 +463,14 @@ class MFTune:
 
     def _run_bo_step(self, budget: Budget, weights: TaskWeights) -> None:
         t0 = _time.perf_counter()
-        sources = self._sources_for_gen(weights)
-        incumbent_cfg, _ = self._best()
-        # `is not None`: an all-defaults {} incumbent is falsy but real
-        incumbents = [incumbent_cfg] if incumbent_cfg is not None else []
-        evaluated = [o.config for o in self.target.observations]
-        cands = self.gen.recommend(1, sources, incumbents=incumbents, exclude=evaluated)
+        with obs.span("bo_recommend", mode="bo_step") as sp:
+            sources = self._sources_for_gen(weights)
+            incumbent_cfg, _ = self._best()
+            # `is not None`: an all-defaults {} incumbent is falsy but real
+            incumbents = [incumbent_cfg] if incumbent_cfg is not None else []
+            evaluated = [o.config for o in self.target.observations]
+            cands = self.gen.recommend(1, sources, incumbents=incumbents, exclude=evaluated)
+            sp.set(sources=len(sources), candidates=len(cands))
         self._charge_overhead("bo_recommend", t0)
         if cands:
             self._evaluate(budget, cands[0], 1.0, None)
@@ -432,32 +482,34 @@ class MFTune:
 
         def provide(n: int, rungs: List[Rung]) -> Sequence[Config]:
             t0 = _time.perf_counter()
-            ws: List[Config] = []
-            multi_rung = len(rungs) > 1
-            if opt.enable_warmstart_p2 and opt.enable_transfer and multi_rung:
-                tasks = {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
-                self.ws_queue.rebuild(weights, tasks)
-                # as many as survive to full fidelity in this inner loop
-                ws = self.ws_queue.take(rungs[-1].n)
-            sources = self._sources_for_gen(weights)
-            incumbent_cfg, _ = self._best()
-            # `is not None`: an all-defaults {} incumbent is falsy but real
-            incumbents = [incumbent_cfg] if incumbent_cfg is not None else []
-            evaluated = [o.config for o in self.target.observations]
-            if self.hb.backend == "table":
-                # rung-table provisioning: BO candidates stay one columnar
-                # batch; the table indexes (ws rows + batch rows) by column
-                # and materializes dicts only when an evaluation needs them
-                bo_batch = self.gen.recommend_batch(
+            with obs.span("bo_recommend", mode="provide", n=n) as sp:
+                ws: List[Config] = []
+                multi_rung = len(rungs) > 1
+                if opt.enable_warmstart_p2 and opt.enable_transfer and multi_rung:
+                    tasks = {t.task_id: t for t in self.kb.source_tasks(self.target.task_id)}
+                    self.ws_queue.rebuild(weights, tasks)
+                    # as many as survive to full fidelity in this inner loop
+                    ws = self.ws_queue.take(rungs[-1].n)
+                sources = self._sources_for_gen(weights)
+                incumbent_cfg, _ = self._best()
+                # `is not None`: an all-defaults {} incumbent is falsy but real
+                incumbents = [incumbent_cfg] if incumbent_cfg is not None else []
+                evaluated = [o.config for o in self.target.observations]
+                sp.set(warm_starts=len(ws), sources=len(sources))
+                if self.hb.backend == "table":
+                    # rung-table provisioning: BO candidates stay one columnar
+                    # batch; the table indexes (ws rows + batch rows) by column
+                    # and materializes dicts only when an evaluation needs them
+                    bo_batch = self.gen.recommend_batch(
+                        max(n - len(ws), 0), sources, incumbents=incumbents, exclude=evaluated + ws
+                    )
+                    self._charge_overhead("bo_recommend", t0)
+                    return CandidateColumns(ws, bo_batch, limit=n)
+                bo = self.gen.recommend(
                     max(n - len(ws), 0), sources, incumbents=incumbents, exclude=evaluated + ws
                 )
                 self._charge_overhead("bo_recommend", t0)
-                return CandidateColumns(ws, bo_batch, limit=n)
-            bo = self.gen.recommend(
-                max(n - len(ws), 0), sources, incumbents=incumbents, exclude=evaluated + ws
-            )
-            self._charge_overhead("bo_recommend", t0)
-            return (ws + bo)[:n]
+                return (ws + bo)[:n]
 
         def evaluate(cfg: Config, delta: float, cap: Optional[float]):
             return self._evaluate(budget, cfg, delta, cap)
@@ -468,11 +520,12 @@ class MFTune:
         def on_result(cfg, delta, perf, failed, elapsed):
             pass  # recording happens inside _evaluate / _evaluate_many
 
-        self.hb.run_bracket(
-            bracket,
-            provide_candidates=provide,
-            evaluate=evaluate,
-            on_result=on_result,
-            should_stop=lambda: budget.exhausted,
-            evaluate_batch=evaluate_batch,
-        )
+        with obs.span("mfo_bracket", s=bracket.s, n_rungs=len(bracket.rungs)):
+            self.hb.run_bracket(
+                bracket,
+                provide_candidates=provide,
+                evaluate=evaluate,
+                on_result=on_result,
+                should_stop=lambda: budget.exhausted,
+                evaluate_batch=evaluate_batch,
+            )

@@ -29,6 +29,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from .surrogate import ForestPlane, ProbabilisticRandomForest
 
 __all__ = ["ProposeEngine"]
@@ -234,25 +235,29 @@ class ProposeEngine:
             w = jnp.asarray(np.asarray(weights, dtype=float))
             static = ("propose", n_pool, plane.depth, S, tps, k, sig, descent,
                       steps)
+            first = static not in self.compiled
             self.compiled.add(static)
-            if steps is None:
-                idx, Xu, agg = P.propose_step(
-                    self._next_key(), cols, arena, ystats, inc, w,
-                    self._zero(), n_pool=n_pool, depth=plane.depth,
-                    n_sources=S, tps=tps, k=k, sig=sig, descent=descent,
-                    qs=qs if descent == "qs" else None,
-                )
-            else:
-                if self._key is None:
-                    import jax
-                    self._key = jax.random.PRNGKey(self.seed)
-                self._key, (idx, Xu, agg) = P.propose_scan(
-                    self._key, cols, arena, ystats, inc, w, self._zero(),
-                    n_pool=n_pool, depth=plane.depth, n_sources=S, tps=tps,
-                    k=k, sig=sig, descent=descent, steps=steps,
-                    qs=qs if descent == "qs" else None,
-                )
-            return np.asarray(idx), np.asarray(Xu), np.asarray(agg)
+            with obs.span("propose_step", mode="device_pool", bucket=n_pool,
+                          descent=descent, sources=S, k=k, compile=first):
+                obs.observe("propose/pool_occupancy", 1.0)
+                if steps is None:
+                    idx, Xu, agg = P.propose_step(
+                        self._next_key(), cols, arena, ystats, inc, w,
+                        self._zero(), n_pool=n_pool, depth=plane.depth,
+                        n_sources=S, tps=tps, k=k, sig=sig, descent=descent,
+                        qs=qs if descent == "qs" else None,
+                    )
+                else:
+                    if self._key is None:
+                        import jax
+                        self._key = jax.random.PRNGKey(self.seed)
+                    self._key, (idx, Xu, agg) = P.propose_scan(
+                        self._key, cols, arena, ystats, inc, w, self._zero(),
+                        n_pool=n_pool, depth=plane.depth, n_sources=S, tps=tps,
+                        k=k, sig=sig, descent=descent, steps=steps,
+                        qs=qs if descent == "qs" else None,
+                    )
+                return np.asarray(idx), np.asarray(Xu), np.asarray(agg)
 
     def score_topk(
         self,
@@ -290,11 +295,16 @@ class ProposeEngine:
             inc = jnp.asarray(np.asarray(incumbents, dtype=float))
             w = jnp.asarray(np.asarray(weights, dtype=float))
             static = ("score", bucket, plane.depth, S, tps, k, descent)
+            first = static not in self.compiled
             self.compiled.add(static)
-            idx, _, _ = P.propose_step(
-                None, None, arena, ystats, inc, w, self._zero(),
-                n_pool=bucket, depth=plane.depth, n_sources=S, tps=tps,
-                k=k, sig=(), descent=descent, X=jnp.asarray(Xp), n_valid=N,
-                qs=qs if descent == "qs" else None,
-            )
-            return np.asarray(idx)[: min(n, N)]
+            with obs.span("propose_step", mode="host_pool", bucket=bucket,
+                          descent=descent, sources=S, k=k, compile=first,
+                          occupancy=N / bucket):
+                obs.observe("propose/pool_occupancy", N / bucket)
+                idx, _, _ = P.propose_step(
+                    None, None, arena, ystats, inc, w, self._zero(),
+                    n_pool=bucket, depth=plane.depth, n_sources=S, tps=tps,
+                    k=k, sig=(), descent=descent, X=jnp.asarray(Xp), n_valid=N,
+                    qs=qs if descent == "qs" else None,
+                )
+                return np.asarray(idx)[: min(n, N)]

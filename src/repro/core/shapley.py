@@ -43,6 +43,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from .. import obs as _obs
+
 __all__ = [
     "draw_permutations",
     "shapley_values",
@@ -178,6 +180,9 @@ def _chain_deltas_batched(
         from ..kernels.forest_eval.chain import build_chain_plan
 
         plan = build_chain_plan(model, d)
+    _obs.count(
+        "shapley/chain_kernel" if plan is not None else "shapley/composite_fallback"
+    )
 
     for a in range(0, n * P, chains_per_call):
         b = min(a + chains_per_call, n * P)

@@ -64,6 +64,8 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs as _obs
+
 __all__ = [
     "Knob",
     "FloatKnob",
@@ -990,8 +992,9 @@ class ConfigSpace:
         its restriction CDF table (log knobs in log space on the columnar
         default — see module docstring).
         """
-        U = rng.random((n, self.dim))
-        return self._map_unit_draws(U)
+        with _obs.span("space_sample", kind="uniform", n=n, dim=self.dim):
+            U = rng.random((n, self.dim))
+            return self._map_unit_draws(U)
 
     def lhs_sample(self, rng: np.random.Generator, n: int) -> ConfigBatch:
         """Latin Hypercube Sampling (McKay et al.), restriction-aware.
@@ -1001,10 +1004,11 @@ class ConfigSpace:
         """
         if n <= 0:
             return ConfigBatch(self, np.zeros((0, self.dim)))
-        U = np.empty((n, self.dim))
-        for j in range(self.dim):
-            U[:, j] = (rng.permutation(n) + rng.random(n)) / n
-        return self._map_unit_draws(U)
+        with _obs.span("space_sample", kind="lhs", n=n, dim=self.dim):
+            U = np.empty((n, self.dim))
+            for j in range(self.dim):
+                U[:, j] = (rng.permutation(n) + rng.random(n)) / n
+            return self._map_unit_draws(U)
 
     def _map_unit_draws(self, U: np.ndarray) -> ConfigBatch:
         plane = self.plane()
@@ -1029,17 +1033,18 @@ class ConfigSpace:
         matrix, a (n, dim) standard-normal step matrix, and a (n, dim)
         uniform resample matrix for categorical/bool knobs.
         """
-        batch = ConfigBatch.from_configs(self, cfgs)
-        n = len(batch)
-        G = rng.random((n, self.dim))
-        Z = rng.standard_normal((n, self.dim))
-        C = rng.random((n, self.dim))
-        plane = self.plane()
-        if get_space_backend() == "columnar":
-            V = plane.mutate_values(batch.values, G, Z, C, scale, p)
-        else:
-            V = _scalar_mutate_values(plane, batch.values, G, Z, C, scale, p)
-        return ConfigBatch(self, V)
+        with _obs.span("space_sample", kind="mutate", n=len(cfgs), dim=self.dim):
+            batch = ConfigBatch.from_configs(self, cfgs)
+            n = len(batch)
+            G = rng.random((n, self.dim))
+            Z = rng.standard_normal((n, self.dim))
+            C = rng.random((n, self.dim))
+            plane = self.plane()
+            if get_space_backend() == "columnar":
+                V = plane.mutate_values(batch.values, G, Z, C, scale, p)
+            else:
+                V = _scalar_mutate_values(plane, batch.values, G, Z, C, scale, p)
+            return ConfigBatch(self, V)
 
     def mutate(self, cfg: Config, rng: np.random.Generator, scale: float = 0.2, p: float = 0.3) -> Config:
         """Single-config convenience wrapper over :meth:`mutate_many`."""

@@ -41,6 +41,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs as _obs
+
 __all__ = [
     "RegressionTree",
     "ProbabilisticRandomForest",
@@ -609,6 +611,7 @@ class ForestPlane:
         """Fused multi-source predict: (means, vars), each (S, N)."""
         X = np.atleast_2d(np.asarray(X, dtype=float))
         if backend == "numpy":
+            _obs.count("forest_plane/numpy")
             nid = packed_descend(self.feat, self.thr, self.child, self.roots, X, self.depth)
             m_t, v_t = np.take(self.mean, nid), np.take(self.var, nid)
         else:
@@ -618,15 +621,18 @@ class ForestPlane:
                 from ..kernels.forest_eval.ops import forest_plane_eval
 
                 try:
-                    return forest_plane_eval(
+                    out = forest_plane_eval(
                         self.feat, self.thr, self.child, self.mean, self.var,
                         self.roots, X, self.depth, self.y_means, self.y_stds,
                         trees_per_source=next(iter(tree_counts)),
                     )
+                    _obs.count("forest_plane/fused_device")
+                    return out
                 except RuntimeError:
                     pass  # no jax: fall through to the numpy-combine path
             from ..kernels.forest_eval.ops import forest_eval
 
+            _obs.count("forest_plane/host_combine")
             m_t, v_t = forest_eval(
                 self.feat, self.thr, self.child, self.mean, self.var, self.roots,
                 X, self.depth, backend=backend,
@@ -668,6 +674,8 @@ class ProbabilisticRandomForest(Surrogate):
     def fit(self, X: np.ndarray, y: np.ndarray) -> "ProbabilisticRandomForest":
         X = np.atleast_2d(np.asarray(X, dtype=float))
         y = np.asarray(y, dtype=float)
+        _obs.count("surrogate/fits")
+        _obs.observe("surrogate/fit_n_obs", float(len(y)))
         self.X_, self.y_ = X, y
         self._y_mean = float(y.mean()) if len(y) else 0.0
         self._y_std = float(y.std()) or 1.0

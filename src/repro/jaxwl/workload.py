@@ -15,6 +15,7 @@ import json
 import os
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from .. import obs
 from ..core.space import BoolKnob, CatKnob, ConfigSpace, FloatKnob, IntKnob
 from ..tuneapi import EvalResult, Workload
 
@@ -118,21 +119,28 @@ class CellWorkload(Workload):
     ) -> EvalResult:
         cfg = dict(self._space.default(), **config)
         idx = list(query_indices) if query_indices is not None else range(len(self.cells))
-        lats: List[float] = []
-        total = 0.0
-        for qi in idx:
-            t = self._eval_cell(self.cells[qi], cfg)
-            if t is None or t < 0:
-                return EvalResult(per_query_latency=lats + [float("inf")],
-                                  per_query_cost=lats + [0.0], failed=True,
-                                  failure_reason="compile_error")
-            if cost_cap is not None and total + t > cost_cap:
-                return EvalResult(per_query_latency=lats + [t],
-                                  per_query_cost=lats + [max(cost_cap - total, 0.0)],
-                                  failed=True, failure_reason="early_stop")
-            lats.append(t)
-            total += t
-        return EvalResult(per_query_latency=lats, per_query_cost=list(lats))
+        with obs.span("workload_eval", task=self.task_id, n=1, queries=len(idx)) as sp:
+            lats: List[float] = []
+            total = 0.0
+            for qi in idx:
+                t = self._eval_cell(self.cells[qi], cfg)
+                if t is None or t < 0:
+                    obs.count("workload/compile_error")
+                    sp.set(failed=True, reason="compile_error")
+                    return EvalResult(per_query_latency=lats + [float("inf")],
+                                      per_query_cost=lats + [0.0], failed=True,
+                                      failure_reason="compile_error")
+                if cost_cap is not None and total + t > cost_cap:
+                    obs.count("workload/early_stop")
+                    sp.set(failed=True, reason="early_stop")
+                    return EvalResult(per_query_latency=lats + [t],
+                                      per_query_cost=lats + [max(cost_cap - total, 0.0)],
+                                      failed=True, failure_reason="early_stop")
+                lats.append(t)
+                total += t
+            obs.count("workload/ok")
+            sp.set(failed=False, reason="ok")
+            return EvalResult(per_query_latency=lats, per_query_cost=list(lats))
 
     def evaluate_many(
         self,
@@ -158,6 +166,8 @@ class CellWorkload(Workload):
                     cfg, query_indices=query_indices, cost_cap=cap,
                     data_fraction=data_fraction,
                 )
+            else:
+                obs.count("workload/batch_dedup")
             out.append(memo[key])
         return out
 

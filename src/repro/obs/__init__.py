@@ -1,0 +1,41 @@
+"""repro.obs — unified tracing & metrics plane for the tuner loop.
+
+Hot-path API (one-branch no-ops when no tracer is installed):
+
+    from repro import obs
+
+    with obs.span("surrogate_fit", rung=r) as sp:
+        ...
+        sp.set(n_trees=len(trees))
+    obs.count("surrogate_store/hits")
+    obs.observe("eval/elapsed_s", dt)
+
+Enable tracing for a block and export:
+
+    with obs.tracing(name="tpch-run") as tr:
+        result = MFTune(wl, kb, opts).run(budget)
+    obs.export_perfetto(tr, "run.perfetto.json")   # ui.perfetto.dev
+    obs.export_jsonl(tr, "run.trace.jsonl")
+
+See docs/OBSERVABILITY.md for the span/metric vocabulary.
+"""
+
+from .metrics import Counter, Gauge, Histogram, Metrics
+from .trace import (
+    Span, Tracer, get_tracer, set_tracer, tracing,
+    span, instant, count, gauge, observe,
+)
+from .export import (
+    trace_events, export_jsonl, export_perfetto, read_events,
+    load_schema, validate_events, SCHEMA_PATH,
+)
+from .report import summarize
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Metrics",
+    "Span", "Tracer", "get_tracer", "set_tracer", "tracing",
+    "span", "instant", "count", "gauge", "observe",
+    "trace_events", "export_jsonl", "export_perfetto", "read_events",
+    "load_schema", "validate_events", "SCHEMA_PATH",
+    "summarize",
+]

@@ -1,0 +1,114 @@
+"""End-to-end trace self-check: ``python -m repro.obs.selfcheck``.
+
+Runs one small tracing-enabled ``MFTune.tune()`` against the warm-history
+TPC-H recipe (the same one the tier-1 identity tests pin), exports the
+trace in both formats, and asserts the acceptance properties of the
+observability plane:
+
+  * every event validates against ``trace_schema.json``;
+  * the span stream covers every tuner stage: pool generation, surrogate
+    fit/eval, propose, rung evaluation (MFO must activate), compression,
+    and workload evaluation;
+  * the Perfetto export is plain JSON (``json.load`` round-trips) and
+    decodes back to schema-valid canonical events;
+  * the run summary renders.
+
+Exit code 0 = all checks passed. Used by scripts/check.sh as the
+trace-schema validation gate.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+REQUIRED_SPANS = {
+    "pool_gen",
+    "surrogate_fit",
+    "surrogate_eval",
+    "bo_recommend",
+    "rung_eval",
+    "space_compression",
+    "workload_eval",
+    "evaluate",
+    "iteration",
+}
+
+
+def traced_run():
+    """One warm-history MFTune run under a fresh tracer."""
+    from .. import obs
+    from ..core import MFTune, MFTuneOptions
+    from ..core.knowledge import KnowledgeBase
+    from ..sparksim import SparkWorkload, TaskSpec, generate_history
+    from ..tuneapi import Budget
+
+    kb = KnowledgeBase()
+    kb.add_task(
+        generate_history(
+            TaskSpec("tpch", 100, "A").workload(), n_obs=12, n_init=5, seed=3
+        ),
+        persist=False,
+    )
+    wl = SparkWorkload("tpch", 100, "A")
+    tracer = obs.Tracer("selfcheck")
+    with obs.tracing(tracer):
+        res = MFTune(wl, kb, MFTuneOptions(seed=0)).tune(Budget(8 * 3600.0))
+    return res, tracer
+
+
+def main(argv=None) -> int:
+    from .. import obs
+
+    res, tracer = traced_run()
+    events = obs.trace_events(tracer)
+    failures = []
+
+    violations = obs.validate_events(events)
+    if violations:
+        failures.append(f"schema: {len(violations)} violations, e.g. {violations[:3]}")
+
+    seen = {e["name"] for e in events if e["type"] == "span"}
+    missing = REQUIRED_SPANS - seen
+    if missing:
+        failures.append(f"span coverage: missing {sorted(missing)}")
+
+    if not any(e["type"] == "counter" for e in events):
+        failures.append("no counter events exported")
+    if res.overheads != res.metrics["counters"] and not res.overheads:
+        failures.append("TuningResult.overheads view is empty")
+
+    with tempfile.TemporaryDirectory() as td:
+        pf = os.path.join(td, "trace.json")
+        jl = os.path.join(td, "trace.jsonl")
+        obs.export_perfetto(tracer, pf)
+        obs.export_jsonl(tracer, jl)
+        with open(pf) as f:
+            doc = json.load(f)  # must be plain JSON for ui.perfetto.dev
+        if "traceEvents" not in doc:
+            failures.append("perfetto export lacks traceEvents")
+        for path in (pf, jl):
+            back = obs.read_events(path)
+            v = obs.validate_events(back)
+            if v:
+                failures.append(f"{os.path.basename(path)} round-trip: {v[:3]}")
+        if len(obs.read_events(pf)) != len(obs.read_events(jl)):
+            failures.append("perfetto and jsonl round-trips disagree on event count")
+
+    print(obs.summarize(events))
+    print()
+    n_spans = sum(e["type"] == "span" for e in events)
+    print(f"selfcheck: {len(events)} events, {n_spans} spans, "
+          f"{len(seen)} distinct span names, {len(violations)} schema violations")
+    if failures:
+        for f in failures:
+            print("FAIL:", f)
+        return 1
+    print("selfcheck: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

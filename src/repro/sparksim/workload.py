@@ -14,6 +14,7 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from .. import obs
 from ..core.space import ConfigSpace
 from ..tuneapi import EvalResult, Workload
 from .knobs import spark_space
@@ -60,12 +61,17 @@ class SparkWorkload(Workload):
         data_fraction: float = 1.0,
     ) -> EvalResult:
         cfg = dict(self._space.default(), **config)
-        lats, costs, failed, reason = self.model.evaluate(
-            cfg,
-            query_indices=list(query_indices) if query_indices is not None else None,
-            data_fraction=data_fraction,
-            cost_cap=cost_cap,
-        )
+        with obs.span("workload_eval", task=self.task_id, n=1,
+                      queries=len(query_indices) if query_indices is not None
+                      else len(self.model.profiles)) as sp:
+            lats, costs, failed, reason = self.model.evaluate(
+                cfg,
+                query_indices=list(query_indices) if query_indices is not None else None,
+                data_fraction=data_fraction,
+                cost_cap=cost_cap,
+            )
+            obs.count(f"workload/{reason or 'ok'}")
+            sp.set(failed=failed, reason=reason or "ok")
         return EvalResult(
             per_query_latency=lats, per_query_cost=costs, failed=failed, failure_reason=reason
         )
@@ -80,12 +86,20 @@ class SparkWorkload(Workload):
         """Batched evaluation via the vectorized cost-model grid."""
         caps = self._per_config_caps(cost_cap, len(configs))
         cfgs = [dict(self._space.default(), **c) for c in configs]
-        rows = self.model.evaluate_batch(
-            cfgs,
-            query_indices=list(query_indices) if query_indices is not None else None,
-            data_fraction=data_fraction,
-            cost_cap=caps,
-        )
+        with obs.span("workload_eval", task=self.task_id, n=len(cfgs),
+                      queries=len(query_indices) if query_indices is not None
+                      else len(self.model.profiles)) as sp:
+            rows = self.model.evaluate_batch(
+                cfgs,
+                query_indices=list(query_indices) if query_indices is not None else None,
+                data_fraction=data_fraction,
+                cost_cap=caps,
+            )
+            n_failed = 0
+            for _, _, failed, reason in rows:
+                obs.count(f"workload/{reason or 'ok'}")
+                n_failed += bool(failed)
+            sp.set(failures=n_failed)
         return [
             EvalResult(per_query_latency=lats, per_query_cost=costs,
                        failed=failed, failure_reason=reason)
