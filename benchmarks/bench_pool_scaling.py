@@ -16,11 +16,24 @@ protocol's contract.
 
 The speedup reported at 131072 is the measured number on the current
 host. The 10x target assumes an accelerator; on a single-core CPU the
-fused path is sort- and gather-bound (rank aggregation's stable sort
-~0.6 s, descent + combine ~1.3 s at 12 x 131072), which caps the ratio
-around 4x there. The pallas-descent row is gated on a non-CPU backend.
+fused path is sort- and gather-bound, which historically capped the
+ratio around 4x there. PR 10 replaced the rank-aggregation stage's
+u64 stable sort with a radix-rank kernel (``rank_impl="callback"`` on
+CPU: an LSD counting sort behind a raw XLA custom-call), cutting that
+stage ~5x at 12 x 131072. The pallas-descent row is gated on a non-CPU
+backend.
 
-``--smoke`` (or REPRO_BENCH_SMOKE=1) sweeps two small pools, 1 repetition.
+Per-stage rows decompose the top pool size: the rank-aggregation and
+top-k stage programs are timed standalone (they are the exact programs
+the engine dispatches), the end-to-end number is the ``propose_step``
+span duration captured by a tracer, and the descent+combine+EI residual
+is their difference — the fused program is one jit, so there is no
+in-program stage boundary to instrument directly.
+
+``--smoke`` (or REPRO_BENCH_SMOKE=1) sweeps two small pools, 1
+repetition, and gates the radix rank kernel against the pinned
+``np.argsort(-scores, kind="stable")`` permutation on a tie- and
+special-heavy fixture.
 """
 
 from __future__ import annotations
@@ -140,6 +153,95 @@ def _run():
             "derived": f"pallas descent ({jax.default_backend()})",
         })
 
+    # ---------------------------------------------------------- per-stage
+    # Decompose the top pool size into rank-agg / top-k / descent. Rank
+    # aggregation and top-k are timed through the exact stage programs the
+    # fused step embeds; the end-to-end number is the propose_step span
+    # captured by a tracer (non-compile calls only); descent+combine+EI is
+    # the residual. A fresh engine keeps the main engine's jit-cache guard
+    # meaningful (per-stage runs compile extra rank_impl signatures).
+    from repro import obs
+    from repro.kernels.forest_eval import propose as P
+    from repro.kernels.forest_eval import rank as R
+
+    n_top = max(pools)
+    reps_st = 1 if smoke else 3
+    scores_fix = rng.standard_normal((N_SOURCES, n_top))
+    scores_fix[rng.random(scores_fix.shape) < 0.1] = 0.0  # tie clusters
+    w_fix = np.asarray(ws)
+
+    t_rank = {}
+    for impl in ("sort", "callback"):
+        t_rank[impl] = _best(
+            lambda: P.aggregate_ranks_host(scores_fix, w_fix, rank_impl=impl),
+            reps_st,
+        )
+        rows.append({
+            "name": f"stage_rank_{impl}_{n_top}",
+            "us_per_call": t_rank[impl] * 1e6,
+            "derived": f"rank-aggregation stage alone ({N_SOURCES} x {n_top})",
+        })
+    rank_speedup = t_rank["sort"] / t_rank["callback"]
+    rows.append({
+        "name": f"stage_rank_speedup_{n_top}", "us_per_call": rank_speedup,
+        "derived": (f"radix-rank callback vs fused stable sort at "
+                    f"{N_SOURCES} x {n_top} (PR 10 acceptance: >= 2x on CPU)"),
+    })
+    if jax.default_backend() == "cpu" and not smoke:
+        assert rank_speedup >= 2.0, (
+            f"rank-aggregation stage speedup regressed: {rank_speedup:.2f}x"
+        )
+
+    import jax.numpy as jnp
+
+    with P._x64():
+        topk_fn = jax.jit(lambda a: P._sort_perm_asc1d(a)[:K])
+        agg_fix = jnp.asarray(rng.random(n_top))
+        t_topk = _best(lambda: np.asarray(topk_fn(agg_fix)), reps_st)
+    rows.append({
+        "name": f"stage_topk_{n_top}", "us_per_call": t_topk * 1e6,
+        "derived": "top-k stage alone (monotone-key argsort, take k)",
+    })
+
+    eng_st = ProposeEngine(space, seed=0)
+    t_total = {}
+    for impl in ("sort", "callback"):
+        with obs.tracing() as tr:
+            for _ in range(reps_st + 1):
+                eng_st.propose(models, incs, ws, K, pool_size=n_top,
+                               rank_impl=impl)
+        durs = [e["dur"] for e in tr.events
+                if e.get("name") == "propose_step"
+                and e["args"].get("rank") == impl
+                and not e["args"].get("compile")]
+        t_total[impl] = min(durs)
+        rows.append({
+            "name": f"propose_span_{impl}_{n_top}",
+            "us_per_call": t_total[impl] * 1e6,
+            "derived": f"end-to-end propose_step span, rank_impl={impl}",
+        })
+    t_resid = min(t_total[i] - t_rank[i] - t_topk for i in t_total)
+    rows.append({
+        "name": f"stage_descent_residual_{n_top}",
+        "us_per_call": max(t_resid, 0.0) * 1e6,
+        "derived": ("pool draw + descent + combine + EI residual "
+                    "(propose_step span minus rank-agg and top-k stages)"),
+    })
+
+    if smoke:
+        # radix rank vs pinned stable argsort on a tie/special-heavy fixture
+        s = rng.standard_normal((4, 3000))
+        s[rng.random(s.shape) < 0.3] = 0.25
+        s[0, :8] = [0.0, -0.0, 5e-324, -5e-324, np.inf, -np.inf, 1e-310, 0.0]
+        want = np.argsort(-s, axis=-1, kind="stable")
+        assert np.array_equal(R.radix_argsort(s), want), (
+            "radix rank kernel diverged from the pinned stable argsort"
+        )
+        rows.append({
+            "name": "smoke_radix_identity", "us_per_call": 1.0,
+            "derived": "radix_argsort == np.argsort(-s, kind='stable'): OK",
+        })
+
     crossover = next((n for n in pools if ratios[n] >= 1.0), None)
     rows.append({
         "name": "crossover_pool", "us_per_call": float(crossover or 0),
@@ -174,6 +276,12 @@ def run(force: bool = False):
 
 if __name__ == "__main__":
     if "--smoke" in sys.argv:
+        # smoke validates the selection-identity gates, the radix-rank
+        # permutation gate, and the jit-cache guard without overwriting
+        # the committed multi-repetition baseline JSON
         os.environ["REPRO_BENCH_SMOKE"] = "1"
-    for r in run(force=True):
-        print(r)
+        for r in _run():
+            print(r)
+    else:
+        for r in run(force=True):
+            print(r)

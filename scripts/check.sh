@@ -28,6 +28,12 @@ python -m pytest -x -q tests/test_obs.py
 echo "== hb-schedule bench smoke (promotion equivalence + allocation-growth guard) =="
 python -m benchmarks.bench_hb_schedule --smoke > /dev/null
 
+echo "== rank/descent kernel gate (radix == stable argsort; chain-delta identity) =="
+python -m pytest -x -q tests/test_rank_kernel.py tests/test_pool_delta.py tests/test_chain_decline.py
+
+echo "== pool-scaling bench smoke (fused-vs-staged identity + jit-cache guard) =="
+python -m benchmarks.bench_pool_scaling --smoke > /dev/null
+
 echo "== trace-schema validation (traced end-to-end run, every event checked) =="
 python -m repro.obs.selfcheck > /dev/null
 
@@ -38,7 +44,8 @@ echo "== tier-1: pytest -x -q (rest of the fast suite) =="
 python -m pytest -x -q --ignore=tests/test_batch_eval.py --ignore=tests/test_surrogate_packed.py \
   --ignore=tests/test_space_plane.py --ignore=tests/test_tree_frontier.py \
   --ignore=tests/test_shapley_batched.py --ignore=tests/test_rung_table.py \
-  --ignore=tests/test_obs.py
+  --ignore=tests/test_obs.py --ignore=tests/test_rank_kernel.py \
+  --ignore=tests/test_pool_delta.py --ignore=tests/test_chain_decline.py
 
 if [[ "${1:-}" == "--slow" ]]; then
   echo "== slow tier =="
@@ -47,5 +54,7 @@ if [[ "${1:-}" == "--slow" ]]; then
   python -m benchmarks.bench_surrogate --smoke
   echo "== config-space bench smoke (1 repetition) =="
   python -m benchmarks.bench_config_space --smoke
+  echo "== pool-scaling full sweep (refreshes results/bench/pool_scaling.json) =="
+  python -m benchmarks.bench_pool_scaling > /dev/null
 fi
 echo "OK"

@@ -340,13 +340,15 @@ def _plane_for(packs: list) -> ForestPlane:
 
 
 def predict_sources(
-    models: Sequence[Surrogate], X: np.ndarray
+    models: Sequence[Surrogate], X: np.ndarray, delta=None
 ) -> Tuple[np.ndarray, np.ndarray]:
     """(means, vars), each (S, N), for all source surrogates on one pool.
 
     When every source is a fitted PRF on a packed backend, their arenas fuse
     into one :class:`ForestPlane` descent; otherwise each model predicts in
-    turn (the GP / legacy-loop fallback).
+    turn (the GP / legacy-loop fallback). ``delta`` is the candidate pool's
+    mutation provenance (``(bases, base_of)``) — on the fused host path it
+    opts the plane into bitvector delta scoring (bit-identical leaf stats).
     """
     X = np.atleast_2d(np.asarray(X, dtype=float))
     fusable = len(models) > 1 and all(
@@ -359,7 +361,7 @@ def predict_sources(
         # backend wins over numpy regardless of model order
         backends = {m.backend for m in models}
         backend = next((b for b in ("pallas", "jax", "auto") if b in backends), "numpy")
-        return plane.predict(X, backend=backend)
+        return plane.predict(X, backend=backend, delta=delta)
     means = np.empty((len(models), X.shape[0]))
     vars_ = np.empty_like(means)
     for i, m in enumerate(models):
@@ -368,11 +370,12 @@ def predict_sources(
 
 
 def score_sources(
-    models: Sequence[Surrogate], X: np.ndarray, incumbents: Sequence[float]
+    models: Sequence[Surrogate], X: np.ndarray, incumbents: Sequence[float],
+    delta=None,
 ) -> np.ndarray:
     """Fused acquisition: EI of every source on every candidate, shape (S, N)."""
     with obs.span("surrogate_eval", pool=int(X.shape[0]), sources=len(models)):
-        means, vars_ = predict_sources(models, X)
+        means, vars_ = predict_sources(models, X, delta=delta)
         return ei_matrix(means, vars_, np.asarray(incumbents, dtype=float))
 
 
@@ -382,16 +385,19 @@ def aggregate_ranks(scores: np.ndarray, weights: Sequence[float]) -> np.ndarray:
     ``scores`` is the (S, N) acquisition matrix; each row is converted to
     ranks where rank 0 = best (highest score). Lower aggregate rank = more
     promising. Returns the aggregate rank per candidate, shape (N,).
+
+    The rank matrix comes from ``kernels.forest_eval.rank.rank_rows``: a
+    16-bit digit-pass radix over monotone u64 keys above its crossover,
+    the stable f64 argsort below — both give the exact ranks of
+    ``np.argsort(-scores, kind="stable")``, so this stays the pinned
+    numpy reference regardless of dispatch.
     """
+    from ..kernels.forest_eval import rank as _rank
+
     scores = np.atleast_2d(np.asarray(scores, dtype=float))
     if scores.size == 0:
         raise ValueError("no scores to aggregate")
-    s, n = scores.shape
-    order = np.argsort(-scores, axis=1, kind="stable")
-    ranks = np.empty((s, n), dtype=float)
-    np.put_along_axis(
-        ranks, order, np.broadcast_to(np.arange(n, dtype=float), (s, n)), axis=1
-    )
+    ranks = _rank.rank_rows(scores)
     w = np.asarray(weights, dtype=float)
     return (w[:, None] * ranks).sum(axis=0)
 

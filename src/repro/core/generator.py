@@ -316,13 +316,28 @@ class CandidateGenerator:
         with _obs.span("pool_gen", pool_size=self.pool_size,
                        mutations=n_mut if incumbents else 0):
             pool = ss.sample(self._rng, self.pool_size - n_mut if incumbents else self.pool_size)
+            proj = None
             if incumbents:
                 bases = ConfigBatch.from_configs(
                     ss, [incumbents[i % len(incumbents)] for i in range(n_mut)]
                 )
-                muts = ss.mutate_many(ss.project_many(bases), self._rng)
+                proj = ss.project_many(bases)
+                muts = ss.mutate_many(proj, self._rng)
                 pool = ConfigBatch.concat([pool, muts])
-            return self.space.complete_batch(pool)
+            full = self.space.complete_batch(pool)
+            if proj is not None and n_mut:
+                # mutation provenance: candidate i of the mutation block
+                # derives from incumbent i % B — the projected-and-completed
+                # base rows are the exact unmutated-coordinate reference, so
+                # pool scoring can reuse each base's word ANDs (chain-delta)
+                B = min(len(incumbents), n_mut)
+                base_full = self.space.complete_batch(proj.take(np.arange(B)))
+                base_of = np.concatenate([
+                    np.full(len(full) - n_mut, -1, dtype=np.int64),
+                    np.arange(n_mut, dtype=np.int64) % B,
+                ])
+                full.set_delta(base_full.unit(), base_of)
+            return full
 
     def _config_keys(self, cfgs: Sequence[Config]) -> List[bytes]:
         """Canonical row keys for config dicts, cached per dict identity."""
@@ -408,7 +423,9 @@ class CandidateGenerator:
             return pool.take(order[:n])
         with _obs.span("acquisition", pool=len(pool), sources=len(active), k=n):
             X = pool.unit()
-            scores = score_sources([s.model for s in active], X, [s.incumbent for s in active])
+            scores = score_sources([s.model for s in active], X,
+                                   [s.incumbent for s in active],
+                                   delta=pool.delta)
             agg = aggregate_ranks(scores, [s.weight for s in active])
             order = np.argsort(agg, kind="stable")
             return pool.take(order[:n])

@@ -42,6 +42,11 @@ _CONST_SIG = (4, False, False, False, False, 1)  # dropped knob: unit default
 QS_AUTO_MIN = 32768
 
 
+def _default_rank_impl() -> str:
+    from ..kernels.forest_eval import rank as _rank
+    return _rank.default_rank_impl()
+
+
 class ProposeEngine:
     def __init__(self, space, seed: int = 0, pool_size: int = 256,
                  margin: int = 64, arena_cache: int = 8):
@@ -89,29 +94,30 @@ class ProposeEngine:
         from .acquisition import _plane_for
         return _plane_for([m.pack() for m in models])
 
-    def _arena_for(self, plane: ForestPlane) -> Tuple[tuple, tuple, Optional[tuple]]:
-        """Device-resident (arena, ystats, qs_plan) for a fused plane,
-        LRU-cached by plane identity. Unlike ``ops._device_arena`` this
-        keeps the exact tree set (no power-of-two root padding): padded
-        trees would pollute the per-source combine and double the descent
-        work. ``qs_plan`` is the uploaded merged QuickScorer table set
-        (None when a tree exceeds 64 leaves — gather descent then)."""
+    def _arena_for(self, plane: ForestPlane) -> Tuple[tuple, tuple, Optional[tuple], str]:
+        """Device-resident (arena, ystats, qs_plan, qs_reason) for a fused
+        plane, LRU-cached by plane identity. Unlike ``ops._device_arena``
+        this keeps the exact tree set (no power-of-two root padding):
+        padded trees would pollute the per-source combine and double the
+        descent work. ``qs_plan`` is the uploaded merged QuickScorer table
+        set (None when a tree exceeds 128 leaves — gather descent then,
+        with the decline cause in ``qs_reason``)."""
         key = id(plane)
         hit = self._arena_cache.get(key)
         if hit is not None and hit[0] is plane:
             self._arena_cache.move_to_end(key)
-            return hit[1], hit[2], hit[3]
+            return hit[1], hit[2], hit[3], hit[4]
         import jax.numpy as jnp
 
-        from ..kernels.forest_eval.propose import build_qs_plan
+        from ..kernels.forest_eval.propose import build_qs_plan_ex
 
         # the upload dtype follows the ambient x64 flag; entering the scope
         # here keeps a direct caller outside propose()/score_topk() from
         # silently caching a float32 arena
         with self._x64():
-            return self._arena_upload(plane, jnp, build_qs_plan, key)
+            return self._arena_upload(plane, jnp, build_qs_plan_ex, key)
 
-    def _arena_upload(self, plane, jnp, build_qs_plan, key):
+    def _arena_upload(self, plane, jnp, build_qs_plan_ex, key):
         arena = tuple(jnp.asarray(a) for a in (
             plane.feat, plane.thr, plane.child, plane.mean, plane.var,
             plane.roots,
@@ -123,9 +129,10 @@ class ProposeEngine:
             jnp.asarray(plane.y_stds),
             jnp.asarray(np.array([f.y_std ** 2 for f in plane.forests])),
         )
-        qs_host = build_qs_plan(plane.feat, plane.thr, plane.child,
-                                plane.mean, plane.var, plane.roots,
-                                self.space.dim)
+        qs_host, qs_reason = build_qs_plan_ex(
+            plane.feat, plane.thr, plane.child, plane.mean, plane.var,
+            plane.roots, self.space.dim,
+        )
         qs = None
         if qs_host is not None:
             thrs, tabs, lm, lv, offs = qs_host
@@ -134,10 +141,10 @@ class ProposeEngine:
                 tuple(jnp.asarray(a) for a in tabs),
                 jnp.asarray(lm), jnp.asarray(lv), jnp.asarray(offs),
             )
-        self._arena_cache[key] = (plane, arena, ystats, qs)
+        self._arena_cache[key] = (plane, arena, ystats, qs, qs_reason)
         while len(self._arena_cache) > self._arena_cache_max:
             self._arena_cache.popitem(last=False)
-        return arena, ystats, qs
+        return arena, ystats, qs, qs_reason
 
     def _tables_for(self, sample_space) -> Tuple[tuple, tuple]:
         """Device transform tables for pool draws over ``sample_space``,
@@ -205,6 +212,7 @@ class ProposeEngine:
         n: int,
         sample_space=None,
         descent: str = "auto",
+        rank_impl: Optional[str] = None,
         pool_size: Optional[int] = None,
         steps: Optional[int] = None,
     ):
@@ -220,7 +228,7 @@ class ProposeEngine:
             tps = plane.uniform_tree_count
             if tps is None:
                 raise ValueError("propose requires a uniform tree count per source")
-            arena, ystats, qs = self._arena_for(plane)
+            arena, ystats, qs, qs_reason = self._arena_for(plane)
             sig, cols = self._tables_for(sample_space or self.space)
             import jax.numpy as jnp
 
@@ -228,23 +236,28 @@ class ProposeEngine:
             if descent == "auto":
                 descent = "qs" if qs is not None and n_pool >= QS_AUTO_MIN else "jax"
             elif descent == "qs" and qs is None:
-                raise ValueError("no QuickScorer plan (a tree exceeds 64 leaves)")
+                raise ValueError(f"no QuickScorer plan: {qs_reason}")
+            if rank_impl is None:
+                rank_impl = _default_rank_impl()
             k = min(self._pow2(n + self.margin), n_pool)
             S = len(plane.forests)
             inc = jnp.asarray(np.asarray(incumbents, dtype=float))
             w = jnp.asarray(np.asarray(weights, dtype=float))
-            static = ("propose", n_pool, plane.depth, S, tps, k, sig, descent,
-                      steps)
+            static = ("propose", n_pool, plane.depth, S, tps, k, sig,
+                      rank_impl, descent, steps)
             first = static not in self.compiled
             self.compiled.add(static)
+            obs.count(f"rank_kernel/{rank_impl}")
             with obs.span("propose_step", mode="device_pool", bucket=n_pool,
-                          descent=descent, sources=S, k=k, compile=first):
+                          descent=descent, rank=rank_impl, sources=S, k=k,
+                          compile=first):
                 obs.observe("propose/pool_occupancy", 1.0)
                 if steps is None:
                     idx, Xu, agg = P.propose_step(
                         self._next_key(), cols, arena, ystats, inc, w,
                         self._zero(), n_pool=n_pool, depth=plane.depth,
                         n_sources=S, tps=tps, k=k, sig=sig, descent=descent,
+                        rank_impl=rank_impl,
                         qs=qs if descent == "qs" else None,
                     )
                 else:
@@ -254,8 +267,8 @@ class ProposeEngine:
                     self._key, (idx, Xu, agg) = P.propose_scan(
                         self._key, cols, arena, ystats, inc, w, self._zero(),
                         n_pool=n_pool, depth=plane.depth, n_sources=S, tps=tps,
-                        k=k, sig=sig, descent=descent, steps=steps,
-                        qs=qs if descent == "qs" else None,
+                        k=k, sig=sig, descent=descent, rank_impl=rank_impl,
+                        steps=steps, qs=qs if descent == "qs" else None,
                     )
                 return np.asarray(idx), np.asarray(Xu), np.asarray(agg)
 
@@ -267,6 +280,7 @@ class ProposeEngine:
         weights: Sequence[float],
         n: int,
         descent: str = "auto",
+        rank_impl: Optional[str] = None,
     ) -> np.ndarray:
         """Host-pool mode: score an uploaded unit pool and return the top-n
         candidate indices, bit-identical to the staged numpy path
@@ -279,7 +293,7 @@ class ProposeEngine:
             tps = plane.uniform_tree_count
             if tps is None:
                 raise ValueError("score_topk requires a uniform tree count per source")
-            arena, ystats, qs = self._arena_for(plane)
+            arena, ystats, qs, qs_reason = self._arena_for(plane)
             import jax.numpy as jnp
 
             N, D = X_unit.shape
@@ -287,24 +301,29 @@ class ProposeEngine:
             if descent == "auto":
                 descent = "qs" if qs is not None and bucket >= QS_AUTO_MIN else "jax"
             elif descent == "qs" and qs is None:
-                raise ValueError("no QuickScorer plan (a tree exceeds 64 leaves)")
+                raise ValueError(f"no QuickScorer plan: {qs_reason}")
+            if rank_impl is None:
+                rank_impl = _default_rank_impl()
             Xp = np.zeros((bucket, D))
             Xp[:N] = X_unit
             k = min(self._pow2(n), bucket)
             S = len(plane.forests)
             inc = jnp.asarray(np.asarray(incumbents, dtype=float))
             w = jnp.asarray(np.asarray(weights, dtype=float))
-            static = ("score", bucket, plane.depth, S, tps, k, descent)
+            static = ("score", bucket, plane.depth, S, tps, k, rank_impl,
+                      descent)
             first = static not in self.compiled
             self.compiled.add(static)
+            obs.count(f"rank_kernel/{rank_impl}")
             with obs.span("propose_step", mode="host_pool", bucket=bucket,
-                          descent=descent, sources=S, k=k, compile=first,
-                          occupancy=N / bucket):
+                          descent=descent, rank=rank_impl, sources=S, k=k,
+                          compile=first, occupancy=N / bucket):
                 obs.observe("propose/pool_occupancy", N / bucket)
                 idx, _, _ = P.propose_step(
                     None, None, arena, ystats, inc, w, self._zero(),
                     n_pool=bucket, depth=plane.depth, n_sources=S, tps=tps,
-                    k=k, sig=(), descent=descent, X=jnp.asarray(Xp), n_valid=N,
+                    k=k, sig=(), descent=descent, rank_impl=rank_impl,
+                    X=jnp.asarray(Xp), n_valid=N,
                     qs=qs if descent == "qs" else None,
                 )
                 return np.asarray(idx)[: min(n, N)]

@@ -177,18 +177,25 @@ def _chain_deltas_batched(
 
     plan = None
     if model is not None:
-        from ..kernels.forest_eval.chain import build_chain_plan
+        from ..kernels.forest_eval.chain import build_chain_plan_ex
 
-        plan = build_chain_plan(model, d)
+        plan, _reason = build_chain_plan_ex(model, d)
     _obs.count(
         "shapley/chain_kernel" if plan is not None else "shapley/composite_fallback"
+    )
+    # route the integer prefix/suffix-AND walk through the pallas chain
+    # kernel when the surrogate opted into the pallas backend (ordinals
+    # are integers either way, so values stay bit-identical)
+    chain_backend = (
+        "pallas" if getattr(model, "backend", None) == "pallas" else "numpy"
     )
 
     for a in range(0, n * P, chains_per_call):
         b = min(a + chains_per_call, n * P)
         if plan is not None:
             vals[a:b] = plan.eval_chains(
-                X, background, flat_perms[a:b], x_of_chain[a:b]
+                X, background, flat_perms[a:b], x_of_chain[a:b],
+                backend=chain_backend,
             )
             continue
         masks = _prefix_masks_batch(flat_perms[a:b])          # (C, d+1, d)

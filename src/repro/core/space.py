@@ -827,7 +827,7 @@ class ConfigBatch(Sequence):
     space backend so scalar/columnar runs stay bit-comparable end-to-end.
     """
 
-    __slots__ = ("space", "values", "_unit")
+    __slots__ = ("space", "values", "_unit", "_delta")
 
     def __init__(self, space: "ConfigSpace", values: np.ndarray):
         self.space = space
@@ -837,6 +837,9 @@ class ConfigBatch(Sequence):
         if self.values.shape[1] != space.dim:
             raise ValueError(f"value matrix has {self.values.shape[1]} columns, space has {space.dim}")
         self._unit: Optional[np.ndarray] = None
+        # mutation provenance: (bases_unit, base_of) when rows derive from
+        # incumbent mutations — lets pool scoring reuse per-base word ANDs
+        self._delta = None
 
     @classmethod
     def from_configs(cls, space: "ConfigSpace", cfgs: Sequence[Config]) -> "ConfigBatch":
@@ -875,7 +878,25 @@ class ConfigBatch(Sequence):
         out = ConfigBatch(self.space, self.values[idx])
         if self._unit is not None:
             out._unit = self._unit[idx]
+        if self._delta is not None:
+            bases, base_of = self._delta
+            out._delta = (bases, base_of[idx])
         return out
+
+    @property
+    def delta(self):
+        """Mutation provenance ``(bases_unit, base_of)`` or None (see
+        :meth:`set_delta`); survives :meth:`take` with remapped rows."""
+        return self._delta
+
+    def set_delta(self, bases_unit: np.ndarray, base_of: np.ndarray) -> None:
+        """Attach mutation provenance: ``base_of[i]`` is the row of
+        ``bases_unit`` candidate i was mutated from (-1 = fresh sample).
+        ``bases_unit`` must be in the same unit encoding ``unit()`` yields."""
+        base_of = np.asarray(base_of, dtype=np.int64)
+        if base_of.shape != (len(self),):
+            raise ValueError(f"base_of has shape {base_of.shape}, batch has {len(self)} rows")
+        self._delta = (np.asarray(bases_unit, dtype=float), base_of)
 
     def row_keys(self) -> List[bytes]:
         """Exact-match dedup keys (canonical rows as bytes)."""

@@ -607,13 +607,36 @@ class ForestPlane:
         counts = {f.n_trees for f in self.forests}
         return next(iter(counts)) if len(counts) == 1 else None
 
-    def predict(self, X: np.ndarray, backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
-        """Fused multi-source predict: (means, vars), each (S, N)."""
+    def predict(
+        self, X: np.ndarray, backend: str = "numpy", delta=None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fused multi-source predict: (means, vars), each (S, N).
+
+        ``delta`` opts the host path into bitvector pool scoring with
+        per-base reuse: a ``(bases, base_of)`` pair (see
+        ``chain.PoolPlan.leaf_stats``) from a mutation-heavy candidate
+        pool. Leaf routing via the QuickScorer words is bit-identical to
+        the gather descent, so the output is unchanged — only the
+        per-candidate cost drops to the mutated coordinates plus
+        O(log d) segment lookups. Ignored on accelerated backends (the
+        fused device descent already carries those).
+        """
         X = np.atleast_2d(np.asarray(X, dtype=float))
         if backend == "numpy":
-            _obs.count("forest_plane/numpy")
-            nid = packed_descend(self.feat, self.thr, self.child, self.roots, X, self.depth)
-            m_t, v_t = np.take(self.mean, nid), np.take(self.var, nid)
+            m_t = None
+            if delta is not None and X.shape[0]:
+                from ..kernels.forest_eval.chain import build_pool_plan_ex
+
+                plan, _reason = build_pool_plan_ex(self, X.shape[1])
+                if plan is not None:
+                    _obs.count("forest_plane/chain_delta")
+                    m_t, v_t = plan.leaf_stats(X, *delta)
+            if m_t is None:
+                _obs.count("forest_plane/numpy")
+                nid = packed_descend(
+                    self.feat, self.thr, self.child, self.roots, X, self.depth
+                )
+                m_t, v_t = np.take(self.mean, nid), np.take(self.var, nid)
         else:
             tree_counts = {f.n_trees for f in self.forests}
             if backend in ("jax", "auto") and len(tree_counts) == 1:

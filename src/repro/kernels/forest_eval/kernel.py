@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["forest_eval_pallas"]
+__all__ = ["forest_eval_pallas", "chain_ordinals_pallas"]
 
 
 def _forest_kernel(feat_ref, thr_ref, child_ref, mean_ref, var_ref, roots_ref,
@@ -79,3 +79,68 @@ def forest_eval_pallas(feat, thr, child, mean, var, roots, X, depth,
         ],
         interpret=interpret,
     )(feat, thr, child, mean, var, roots, X)
+
+
+def _chain_kernel(wx_ref, wb_ref, perm_ref, idx_ref, *, d, n_words):
+    """Prefix/suffix-AND walk for one Shapley chain (QuickScorer exit).
+
+    Statically unrolled over the d permutation levels: build the running
+    prefix-AND of the chain's x-term words, then walk levels d..0 keeping
+    the suffix-AND of background-term words; the exit leaf of
+    (level, background row) is the lowest set bit of prefix & suffix —
+    word 0 scanned first for two-word trees. Pure uint64 bit ops; the
+    float leaf gather stays on the host so values match the numpy walk
+    bit-for-bit.
+    """
+    wx = wx_ref[...][0]          # (d, T, W)
+    wb = wb_ref[...]             # (nb, d, T, W)
+    perm = perm_ref[...][0]      # (d,)
+    ones = ~jnp.uint64(0)
+
+    pref = [jnp.full(wx.shape[1:], ones, dtype=jnp.uint64)]
+    for k in range(d):
+        pref.append(pref[k] & jnp.take(wx, perm[k], axis=0))
+
+    suf = jnp.full(wb.shape[:1] + wb.shape[2:], ones, dtype=jnp.uint64)
+    for k in range(d, -1, -1):
+        acc = pref[k][None] & suf                       # (nb, T, W)
+        lsb = acc & (jnp.uint64(0) - acc)
+        pc = jax.lax.population_count(lsb - jnp.uint64(1)).astype(jnp.int32)
+        o = pc[..., 0]
+        for w in range(1, n_words):
+            o = jnp.where(acc[..., w - 1] != 0, o, 64 * w + pc[..., w])
+        idx_ref[0, k] = o
+        if k > 0:
+            suf = suf & jnp.take(wb, perm[k - 1], axis=1)
+
+
+def chain_ordinals_pallas(word_x, word_b, perms, interpret: bool = True):
+    """(C, d+1, nb, T) exit-leaf ordinals via the Pallas chain walk.
+
+    Accepts the ``ChainPlan.row_words`` layouts — (n, d, T) one-word or
+    (n, d, T, W) two-word — and returns exactly what the numpy
+    ``_leaf_ordinals`` walk would. One program instance per chain; the
+    background word block is shared by every instance.
+    """
+    import numpy as np
+
+    if word_x.ndim == 3:
+        word_x = word_x[..., None]
+        word_b = word_b[..., None]
+    C, d, T, W = word_x.shape
+    nb = word_b.shape[0]
+    with jax.experimental.enable_x64(True):
+        idx = pl.pallas_call(
+            functools.partial(_chain_kernel, d=d, n_words=W),
+            grid=(C,),
+            in_specs=[
+                pl.BlockSpec((1, d, T, W), lambda c: (c, 0, 0, 0)),
+                pl.BlockSpec((nb, d, T, W), lambda c: (0, 0, 0, 0)),
+                pl.BlockSpec((1, d), lambda c: (c, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d + 1, nb, T), lambda c: (c, 0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((C, d + 1, nb, T), jnp.int32),
+            interpret=interpret,
+        )(jnp.asarray(word_x), jnp.asarray(word_b),
+          jnp.asarray(perms, dtype=jnp.int32))
+        return np.asarray(idx).astype(np.intp)

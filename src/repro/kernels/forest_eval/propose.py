@@ -16,12 +16,13 @@ Bit-equivalence contract (vs the numpy acquisition reference):
   so the jax side accumulates tree rows in the same order.
 * EI instantiates the same portable Cephes expression tree as the numpy
   reference (``acquisition.make_portable_kernels``).
-* Rank aggregation sorts a monotone uint64 remap of the negated scores
-  (strictly order-preserving on floats; +/-0 canonicalized first since
-  they compare equal) with an int32 payload — XLA:CPU sorts integer keys
-  with narrow payloads measurably faster than f64 keys with i64 payloads —
-  then scatter-adds the weighted rank of each source into the aggregate in
-  source order, which is numpy's exact per-element add sequence.
+* Rank aggregation dispatches on a static ``rank_impl`` (see ``rank.py``):
+  the default CPU path ranks each row with the host radix kernel through a
+  ``pure_callback`` (~5x the sort path at 131072), while ``"sort"`` keeps
+  the monotone-uint64 ``lax.sort`` + scatter-add reference. Every impl
+  produces the exact stable-argsort ranks and accumulates w_s * rank_s in
+  source order — numpy's exact per-element add sequence — so the aggregate
+  is bit-identical across impls.
 * Every product that can feed an add is routed through an XOR-seal
   (:func:`seal`) — a bitcast round trip XORed with a *runtime* uint64 zero
   argument. XLA cannot constant-fold it (the zero is a parameter) and LLVM
@@ -55,6 +56,7 @@ except ImportError as _e:  # pragma: no cover - jax ships with the image
     _jax_err = _e
 
 from ...core import acquisition as _acq
+from . import rank as _rank
 from .ref import _descend
 
 __all__ = [
@@ -63,6 +65,7 @@ __all__ = [
     "pool_bucket",
     "seal",
     "build_qs_plan",
+    "build_qs_plan_ex",
     "propose_step",
     "propose_scan",
     "ei_host",
@@ -172,12 +175,11 @@ def _sort_perm_desc(scores):
     i64 payload x64 mode would impose). +/-0 compare equal under the f64
     order but map to distinct bit patterns, so they are canonicalized to
     one key first — ties then fall back to index order exactly like the
-    stable numpy argsort."""
-    neg = jnp.negative(scores)
-    neg = jnp.where(neg == 0.0, 0.0, neg)
-    bits = lax.bitcast_convert_type(neg, jnp.uint64)
-    sign = (bits >> jnp.uint64(63)).astype(bool)
-    mapped = jnp.where(sign, ~bits, bits | (jnp.uint64(1) << jnp.uint64(63)))
+    stable numpy argsort. The remap is all-integer (see
+    ``rank.monotone_keys_traced``): XLA:CPU compute threads run with
+    FTZ/DAZ set, so a float ``jnp.negative`` / ``== 0.0`` here would
+    silently flush subnormal scores into the zero tie group."""
+    mapped = _rank.monotone_keys_traced(scores)
     iota = jnp.broadcast_to(
         jnp.arange(scores.shape[1], dtype=jnp.int32)[None, :], scores.shape
     )
@@ -187,26 +189,42 @@ def _sort_perm_desc(scores):
 
 def _sort_perm_asc1d(v):
     """``jnp.argsort(v, stable=True)`` for a 1-D float vector via the same
-    monotone uint64 key + int32 payload trick (+/-0 canonicalized)."""
-    v = jnp.where(v == 0.0, 0.0, v)
+    monotone uint64 key + int32 payload trick (+/-0 canonicalized in the
+    integer domain, FTZ-immune — see ``_sort_perm_desc``)."""
+    msb = jnp.uint64(1) << jnp.uint64(63)
     bits = lax.bitcast_convert_type(v, jnp.uint64)
+    bits = jnp.where((bits & ~msb) == 0, jnp.uint64(0), bits)
     sign = (bits >> jnp.uint64(63)).astype(bool)
-    mapped = jnp.where(sign, ~bits, bits | (jnp.uint64(1) << jnp.uint64(63)))
+    mapped = jnp.where(sign, ~bits, bits | msb)
     iota = jnp.arange(v.shape[0], dtype=jnp.int32)
     _, perm = lax.sort((mapped, iota), dimension=0, is_stable=True, num_keys=1)
     return perm
 
 
-def _aggregate_ranks_traced(scores, weights, n_sources, mul):
+def _aggregate_ranks_traced(scores, weights, n_sources, mul, rank_impl="sort"):
     """Replay ``acquisition.aggregate_ranks`` on an (S, N) score matrix.
 
-    ranks_s is the inverse permutation of the stable descending argsort;
-    instead of materializing it (a second argsort), each source's weighted
-    ranks scatter directly into the aggregate at its sorted positions. The
+    With ``rank_impl="sort"`` (the pure-XLA reference): ranks_s is the
+    inverse permutation of the stable descending argsort; instead of
+    materializing it (a second argsort), each source's weighted ranks
+    scatter directly into the aggregate at its sorted positions. The
     scatters run in source order with a data dependency between them, so
     every element accumulates w_s * rank_s in numpy's exact add sequence
     (s = 0 initializes via set, preserving the sign of a +/-0 first term).
+
+    Other impls ("callback", "pallas" — see ``rank.rank_rows_traced``)
+    materialize the rank matrix directly and accumulate elementwise in
+    source order: the ranks are the exact same integers, the sealed
+    products are the same floats, and the per-element add sequence is
+    numpy's, so every impl returns the bit-identical aggregate. On
+    XLA:CPU the callback radix is ~5x the sort+scatter path at 131072.
     """
+    if rank_impl != "sort":
+        ranks = _rank.rank_rows_traced(scores, rank_impl)
+        agg = mul(weights[0], ranks[0])
+        for s in range(1, n_sources):
+            agg = agg + mul(weights[s], ranks[s])
+        return agg
     perm = _sort_perm_desc(scores)
     n = scores.shape[1]
     iota_f = jnp.arange(n, dtype=jnp.float64)
@@ -302,62 +320,41 @@ def _draw_unit_pool(key, sig, cols, n):
 _ONES = np.uint64(0xFFFFFFFFFFFFFFFF)
 
 
-def build_qs_plan(feat, thr, child, mean, var, roots, d):
-    """Host-side QuickScorer tables for a fused multi-source arena, or None.
+def build_qs_plan_ex(feat, thr, child, mean, var, roots, d):
+    """Host-side QuickScorer tables for a fused multi-source arena.
 
-    Same encoding as ``chain.build_chain_plan`` (leaf ordinals left-to-right,
-    per-node masks clearing the left subtree's leaf span, per-feature sorted
-    thresholds prefix-ANDed into false-set tables) but merged across ALL
-    sources' trees into one table set: the tree axis spans every source, so
-    a single searchsorted + AND chain per feature routes the whole pool
-    through the whole arena. Rank ``r = #(thr < v)`` replays the descent's
-    exact ``v > thr`` float comparisons, so leaf routing — and therefore
-    every downstream float — is bit-identical to the gather descent.
+    Same encoding as ``chain.build_chain_plan`` — and literally the same
+    packer (``chain.pack_leaf_spans`` / ``chain.build_false_tables``):
+    leaf ordinals left-to-right in one or two uint64 leaf words per tree,
+    per-node masks clearing the left subtree's leaf span, per-feature
+    sorted thresholds prefix-ANDed into false-set tables — but merged
+    across ALL sources' trees into one table set: the tree axis spans
+    every source, so a single searchsorted + AND chain per feature routes
+    the whole pool through the whole arena. Rank ``r = #(thr < v)``
+    replays the descent's exact ``v > thr`` float comparisons, so leaf
+    routing — and therefore every downstream float — is bit-identical to
+    the gather descent.
 
-    Declines (returns None) when a tree exceeds 64 leaves or splits outside
-    the d-dim space; callers fall back to the gather/pallas descent.
+    Returns ``((thrs, tables, leaf_mean, leaf_var, leaf_offs), "")`` — the
+    word count is implicit in the table shapes ((n_thr+1, T) one-word,
+    (n_thr+1, T, 2) two-word) — or ``(None, reason)`` when a tree exceeds
+    128 leaves or splits outside the d-dim space; callers fall back to the
+    gather/pallas descent.
     """
-    T = len(roots)
-    nodes_by_feat = [[] for _ in range(d)]
-    leaf_mean, leaf_var = [], []
-    leaf_offs = np.empty(T, dtype=np.int64)
-    for t in range(T):
-        base = len(leaf_mean)
-        leaf_offs[t] = base
-        stack = [(int(roots[t]), False)]
-        spans = {}
-        while stack:
-            n, expanded = stack.pop()
-            if child[2 * n] == n:  # leaf: self-loop encoding
-                spans[n] = (len(leaf_mean) - base, len(leaf_mean) - base + 1)
-                leaf_mean.append(float(mean[n]))
-                leaf_var.append(float(var[n]))
-                continue
-            if not expanded:
-                stack.append((n, True))
-                stack.append((int(child[2 * n + 1]), False))
-                stack.append((int(child[2 * n]), False))
-                continue
-            lo, mid = spans[int(child[2 * n])]
-            _, hi = spans[int(child[2 * n + 1])]
-            spans[n] = (lo, hi)
-            if hi > 64 or int(feat[n]) >= d:
-                return None
-            span = np.uint64(((1 << (mid - lo)) - 1) << lo)
-            nodes_by_feat[int(feat[n])].append(
-                (float(thr[n]), t, np.uint64(~span & _ONES))
-            )
-    thrs, tables = [], []
-    for j in range(d):
-        nds = sorted(nodes_by_feat[j], key=lambda z: z[0])
-        tab = np.full((len(nds) + 1, T), _ONES, dtype=np.uint64)
-        for r, (_, t, m) in enumerate(nds):
-            tab[r + 1] = tab[r]
-            tab[r + 1, t] &= m
-        thrs.append(np.array([z[0] for z in nds]))
-        tables.append(tab)
-    return (tuple(thrs), tuple(tables), np.asarray(leaf_mean),
-            np.asarray(leaf_var), leaf_offs)
+    from .chain import build_false_tables, pack_leaf_spans
+
+    packed, reason = pack_leaf_spans(feat, thr, child, mean, var, roots, d)
+    if packed is None:
+        return None, reason
+    nodes_by_feat, leaf_mean, leaf_var, leaf_offs, n_words = packed
+    thrs, tables = build_false_tables(nodes_by_feat, len(roots), n_words)
+    return (tuple(thrs), tuple(tables), leaf_mean, leaf_var, leaf_offs), ""
+
+
+def build_qs_plan(feat, thr, child, mean, var, roots, d):
+    """Back-compat wrapper over :func:`build_qs_plan_ex` (drops the
+    decline reason)."""
+    return build_qs_plan_ex(feat, thr, child, mean, var, roots, d)[0]
 
 
 def _qs_leaf_stats(qs, X):
@@ -367,7 +364,10 @@ def _qs_leaf_stats(qs, X):
     turn ranks into per-tree false-node words, and the AND chain isolates
     each tree's exit leaf as the lowest set bit (ordinal via popcount of
     ``lsb - 1``). Replaces O(T * depth) random gathers with D cache-resident
-    table lookups + D word-ANDs per row.
+    table lookups + D word-ANDs per row. Two-word trees (65..128 leaves,
+    tables with a trailing word axis) scan word 0 first: an empty word 0
+    underflows ``lsb - 1`` to all-ones (popcount 64), so the select picks
+    64 + the word-1 ordinal.
     """
     thrs, tabs, lm, lv, offs = qs
     w = None
@@ -379,6 +379,16 @@ def _qs_leaf_stats(qs, X):
         w = wj if w is None else w & wj
     if w is None:  # degenerate forest of root-leaves
         idx = jnp.broadcast_to(offs[None, :], (X.shape[0], offs.shape[0]))
+    elif w.ndim == 3:  # two leaf words per tree
+        w0, w1 = w[..., 0], w[..., 1]
+        lsb0 = w0 & (jnp.uint64(0) - w0)
+        lsb1 = w1 & (jnp.uint64(0) - w1)
+        leaf = jnp.where(
+            w0 != 0,
+            lax.population_count(lsb0 - jnp.uint64(1)),
+            jnp.uint64(64) + lax.population_count(lsb1 - jnp.uint64(1)),
+        ).astype(jnp.int64)
+        idx = offs[None, :] + leaf
     else:
         lsb = w & (jnp.uint64(0) - w)
         leaf = lax.population_count(lsb - jnp.uint64(1)).astype(jnp.int64)
@@ -404,7 +414,8 @@ def _leaf_stats(arena, X, depth, descent):
 
 
 def _step_body(key, cols, X, arena, qs, ystats, incumbents, weights, n_valid,
-               zi, *, n_pool, depth, n_sources, tps, k, sig, descent):
+               zi, *, n_pool, depth, n_sources, tps, k, sig, descent,
+               rank_impl="sort"):
     if X is None:
         X = _draw_unit_pool(key, sig, cols, n_pool)
     mul = _seal_mul(zi)
@@ -429,7 +440,7 @@ def _step_body(key, cols, X, arena, qs, ystats, incumbents, weights, n_valid,
     # padding: EI = -1 < 0 <= any real EI, appended after real rows =>
     # real rows keep their exact unpadded ranks under the stable sort
     scores = jnp.where(valid[None, :], scores, -1.0)
-    agg = _aggregate_ranks_traced(scores, weights, n_sources, mul)
+    agg = _aggregate_ranks_traced(scores, weights, n_sources, mul, rank_impl)
     agg = jnp.where(valid, agg, jnp.inf)
     idx = _sort_perm_asc1d(agg)[:k]
     return idx, jnp.take(X, idx, axis=0), jnp.take(agg, idx)
@@ -437,24 +448,26 @@ def _step_body(key, cols, X, arena, qs, ystats, incumbents, weights, n_valid,
 
 @functools.partial(
     jax.jit if jax is not None else lambda f, **kw: f,
-    static_argnames=("n_pool", "depth", "n_sources", "tps", "k", "sig", "descent"),
+    static_argnames=("n_pool", "depth", "n_sources", "tps", "k", "sig",
+                     "rank_impl", "descent"),
 )
 def _propose_jit(key, cols, X, arena, qs, ystats, incumbents, weights,
                  n_valid, zi, *, n_pool, depth, n_sources, tps, k, sig,
-                 descent):
+                 rank_impl, descent):
     return _step_body(key, cols, X, arena, qs, ystats, incumbents, weights,
                       n_valid, zi, n_pool=n_pool, depth=depth,
                       n_sources=n_sources, tps=tps, k=k, sig=sig,
-                      descent=descent)
+                      descent=descent, rank_impl=rank_impl)
 
 
 @functools.partial(
     jax.jit if jax is not None else lambda f, **kw: f,
     static_argnames=("n_pool", "depth", "n_sources", "tps", "k", "sig",
-                     "descent", "steps"),
+                     "rank_impl", "descent", "steps"),
 )
 def _propose_scan_jit(key, cols, arena, qs, ystats, incumbents, weights, zi,
-                      *, n_pool, depth, n_sources, tps, k, sig, descent, steps):
+                      *, n_pool, depth, n_sources, tps, k, sig, rank_impl,
+                      descent, steps):
     n_valid = jnp.asarray(n_pool, dtype=jnp.int64)
 
     def body(carry, _):
@@ -462,7 +475,7 @@ def _propose_scan_jit(key, cols, arena, qs, ystats, incumbents, weights, zi,
         out = _step_body(sub, cols, None, arena, qs, ystats, incumbents,
                          weights, n_valid, zi, n_pool=n_pool, depth=depth,
                          n_sources=n_sources, tps=tps, k=k, sig=sig,
-                         descent=descent)
+                         descent=descent, rank_impl=rank_impl)
         return carry, out
 
     key, outs = lax.scan(body, key, None, length=steps)
@@ -471,31 +484,37 @@ def _propose_scan_jit(key, cols, arena, qs, ystats, incumbents, weights, zi,
 
 def propose_step(key, cols, arena, ystats, incumbents, weights, zi,
                  *, n_pool, depth, n_sources, tps, k, sig, descent="jax",
-                 X=None, n_valid=None, qs=None):
+                 rank_impl=None, X=None, n_valid=None, qs=None):
     """One fused propose step. ``X=None`` draws the pool on device from
     ``key``; an uploaded ``X`` (host pool mode) pins the candidates so the
     selection is bit-identical to the staged numpy path. ``descent="qs"``
     routes leaves through the merged QuickScorer tables in ``qs`` (from
-    :func:`build_qs_plan`, uploaded). Returns (idx, X[idx], agg[idx]),
-    each length ``k``."""
+    :func:`build_qs_plan`, uploaded). ``rank_impl`` picks the rank-matrix
+    kernel (``rank.RANK_IMPLS``; None = backend default). Returns
+    (idx, X[idx], agg[idx]), each length ``k``."""
     if n_valid is None:
         n_valid = n_pool
+    if rank_impl is None:
+        rank_impl = _rank.default_rank_impl()
     return _propose_jit(key, cols, X, arena, qs, ystats, incumbents, weights,
                         jnp.asarray(n_valid, dtype=jnp.int64), zi,
                         n_pool=n_pool, depth=depth, n_sources=n_sources,
-                        tps=tps, k=k, sig=sig, descent=descent)
+                        tps=tps, k=k, sig=sig, rank_impl=rank_impl,
+                        descent=descent)
 
 
 def propose_scan(key, cols, arena, ystats, incumbents, weights, zi, *,
                  n_pool, depth, n_sources, tps, k, sig, descent="jax",
-                 steps=1, qs=None):
+                 rank_impl=None, steps=1, qs=None):
     """``steps`` fused propose iterations under one ``lax.scan``, splitting
     the PRNG key per step. Returns (next_key, (idx, X_sel, agg_sel)) with a
     leading ``steps`` axis on each output."""
+    if rank_impl is None:
+        rank_impl = _rank.default_rank_impl()
     return _propose_scan_jit(key, cols, arena, qs, ystats, incumbents,
                              weights, zi, n_pool=n_pool, depth=depth,
                              n_sources=n_sources, tps=tps, k=k, sig=sig,
-                             descent=descent, steps=steps)
+                             rank_impl=rank_impl, descent=descent, steps=steps)
 
 
 # ---------------------------------------------------------------------------
@@ -510,10 +529,11 @@ def _ei_pad_jit(mean, var, best, zi):
 
 @functools.partial(
     jax.jit if jax is not None else lambda f, **kw: f,
-    static_argnames=("n_sources",),
+    static_argnames=("n_sources", "rank_impl"),
 )
-def _ranks_pad_jit(scores, weights, zi, *, n_sources):
-    return _aggregate_ranks_traced(scores, weights, n_sources, _seal_mul(zi))
+def _ranks_pad_jit(scores, weights, zi, *, n_sources, rank_impl="sort"):
+    return _aggregate_ranks_traced(scores, weights, n_sources, _seal_mul(zi),
+                                   rank_impl)
 
 
 def ei_host(mean, var, best) -> np.ndarray:
@@ -538,11 +558,12 @@ def ei_host(mean, var, best) -> np.ndarray:
         return np.asarray(out)[:mf.size].reshape(shape)
 
 
-def aggregate_ranks_host(scores, weights) -> np.ndarray:
+def aggregate_ranks_host(scores, weights, rank_impl=None) -> np.ndarray:
     """Jax rank aggregation, padded to the pool bucket with -inf scores
     (strictly below any finite score, appended last => real columns keep
     their exact unpadded ranks); bit-identical to
-    ``acquisition.aggregate_ranks`` for finite scores."""
+    ``acquisition.aggregate_ranks`` for finite scores under every
+    ``rank_impl`` (None = backend default)."""
     scores = np.atleast_2d(np.asarray(scores, dtype=float))
     if scores.size == 0:
         raise ValueError("no scores to aggregate")
@@ -551,7 +572,10 @@ def aggregate_ranks_host(scores, weights) -> np.ndarray:
     sp = np.full((s, bucket), -np.inf)
     sp[:, :n] = scores
     w = np.asarray(weights, dtype=float)
+    if rank_impl is None:
+        rank_impl = _rank.default_rank_impl()
     with _x64():
         zi = jnp.zeros((), dtype=jnp.uint64)
-        agg = _ranks_pad_jit(jnp.asarray(sp), jnp.asarray(w), zi, n_sources=s)
+        agg = _ranks_pad_jit(jnp.asarray(sp), jnp.asarray(w), zi, n_sources=s,
+                             rank_impl=rank_impl)
         return np.asarray(agg)[:n]

@@ -33,12 +33,13 @@ def test_decline_not_packable():
 
 
 def test_decline_leaf_overflow_and_fallback():
-    # deep trees on plentiful data exceed 64 leaves per tree
+    # deep trees on plentiful data exceed 128 leaves per tree — beyond even
+    # the two-word (uint64 x 2) leaf encoding
     m = _fit_prf(600, 4, n_trees=3, max_depth=12, min_samples_split=2)
     leaves = max(
         sum(1 for nd in t.nodes if nd.feature < 0) for t in m.trees
     )
-    assert leaves > 64, "fixture failed to grow a >64-leaf tree"
+    assert leaves > 128, "fixture failed to grow a >128-leaf tree"
     assert build_chain_plan(m, 4) is None
     assert "leaf word" in chain_decline_reason()
 
@@ -53,6 +54,43 @@ def test_decline_leaf_overflow_and_fallback():
     loop = shapley_values_batch(m.predict_mean, Xq, bg, perms=perms, backend="loop")
     batched = shapley_values_batch(m.predict_mean, Xq, bg, perms=perms, model=m)
     assert np.array_equal(loop, batched)
+
+
+def test_two_word_pack_success():
+    # 64 < leaves <= 128 packs into two uint64 leaf words per tree; the
+    # chain walk must stay bit-identical to the per-chain loop path.
+    m = _fit_prf(170, 5, seed=2, n_trees=3, max_depth=14, min_samples_split=2)
+    leaves = max(
+        sum(1 for nd in t.nodes if nd.feature < 0) for t in m.trees
+    )
+    assert 64 < leaves <= 128, f"fixture grew {leaves} leaves, want (64, 128]"
+    plan = build_chain_plan(m, 5)
+    assert plan is not None and plan.n_words == 2
+    assert chain_decline_reason() == ""
+
+    from repro.core import draw_permutations, shapley_values_batch
+
+    rng = np.random.default_rng(3)
+    Xq = rng.random((3, 5))
+    bg = rng.random((8, 5))
+    perms = draw_permutations(5, 4, rng)
+    loop = shapley_values_batch(m.predict_mean, Xq, bg, perms=perms, backend="loop")
+    chained = shapley_values_batch(m.predict_mean, Xq, bg, perms=perms, model=m)
+    assert np.array_equal(loop, chained)
+
+
+def test_plan_carries_decline_reason():
+    # satellite of the module-global fix: the reason travels on the
+    # (plan, reason) return, not just the legacy last-call slot.
+    from repro.kernels.forest_eval.chain import build_chain_plan_ex
+
+    m_small = _fit_prf(40, 4, n_trees=3, max_depth=3)
+    plan, reason = build_chain_plan_ex(m_small, 4)
+    assert plan is not None and reason == ""
+    assert plan.decline_reason == ""
+
+    plan2, reason2 = build_chain_plan_ex(m_small, 65)
+    assert plan2 is None and "> 64 prefix-mask bits" in reason2
 
 
 def test_success_clears_reason():
